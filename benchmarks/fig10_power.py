@@ -1,0 +1,27 @@
+"""Fig 10 reproduction: power efficiency (perf/W) normalized to 2w x 2t,
+combining the Fig 9 cycle counts with the Fig 8 power model."""
+from __future__ import annotations
+
+from repro.core.simt import power
+from benchmarks.fig9_rodinia import BENCHES, CONFIGS, run_all
+
+
+def main(stats=None):
+    stats = stats or run_all()
+    print("bench,config,perf_per_watt_norm")
+    for name in BENCHES:
+        base = power.power_efficiency(
+            stats[(name, 2, 2)]["cycles"], 2, 2).perf_per_watt
+        best, best_cfg = -1.0, None
+        for w, t in CONFIGS:
+            eff = power.power_efficiency(
+                stats[(name, w, t)]["cycles"], w, t).perf_per_watt
+            print(f"{name},{w}w{t}t,{eff/base:.3f}")
+            if eff > best:
+                best, best_cfg = eff, (w, t)
+        print(f"# {name}: most power-efficient config = "
+              f"{best_cfg[0]}w{best_cfg[1]}t")
+
+
+if __name__ == "__main__":
+    main()

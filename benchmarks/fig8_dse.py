@@ -1,0 +1,33 @@
+"""Fig 8 reproduction: normalized area / power / cell count over the
+(warps x threads) design space, from the synthesis-calibrated model."""
+from __future__ import annotations
+
+from repro.core.simt import power
+
+CONFIGS = [(1, 1), (2, 2), (2, 8), (4, 4), (2, 32), (8, 4), (8, 8),
+           (8, 32), (16, 16), (32, 32)]
+
+
+def rows():
+    out = []
+    for w, t in CONFIGS:
+        out.append(dict(
+            bench="fig8", config=f"{w}w{t}t",
+            area_norm=round(power.area_normalized(w, t), 3),
+            power_norm=round(power.power_normalized(w, t), 3),
+            cells_norm=round(power.cell_count_normalized(w, t), 3),
+            power_mw=round(power.power_mw(w, t), 2)))
+    return out
+
+
+def main():
+    print("bench,config,area_norm,power_norm,cells_norm,power_mw")
+    for r in rows():
+        print(f"fig8,{r['config']},{r['area_norm']},{r['power_norm']},"
+              f"{r['cells_norm']},{r['power_mw']}")
+    # the paper's absolute anchor
+    assert abs(power.power_mw(8, 4) - 46.8) < 1e-6
+
+
+if __name__ == "__main__":
+    main()

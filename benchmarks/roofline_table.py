@@ -1,0 +1,53 @@
+"""Roofline table: aggregate the dry-run artifacts into the per-cell
+(arch x shape x mesh) table of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN = os.path.join(HERE, "experiments", "dryrun")
+
+
+def load(dirpath=DRYRUN, mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, f"*_{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append(dict(arch=r["arch"], shape=r["shape"], mesh=mesh,
+                             status=r.get("status", "?")))
+            continue
+        ro = r["roofline"]
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], mesh=mesh, status="ok",
+            compute_s=ro["compute_s"], memory_s=ro["memory_s"],
+            collective_s=ro["collective_s"], dominant=ro["dominant"],
+            model_flops=ro["model_flops"],
+            hlo_flops_global=ro["hlo_flops_global"],
+            useful=ro["useful_fraction"], mfu_bound=ro["mfu_bound"],
+            dev_gb=r["per_device_bytes"] / 1e9, fits=r["fits_16g"],
+            desc=r.get("desc", "")))
+    return rows
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = load(mesh=mesh)
+        if not rows:
+            continue
+        print(f"# ---- mesh={mesh} ({len(rows)} cells) ----")
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+              "useful_frac,mfu_bound,dev_GB,fits16G")
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"{r['arch']},{r['shape']},{r['status']},,,,,,,")
+                continue
+            print(f"{r['arch']},{r['shape']},{r['compute_s']:.3e},"
+                  f"{r['memory_s']:.3e},{r['collective_s']:.3e},"
+                  f"{r['dominant']},{r['useful']:.3f},"
+                  f"{r['mfu_bound']:.4f},{r['dev_gb']:.2f},{r['fits']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark entry point: one section per paper table/figure + the
+roofline table.  `PYTHONPATH=src python -m benchmarks.run`"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    print("==== Fig 8: area/power design-space (synthesis model) ====")
+    from benchmarks import fig8_dse
+    fig8_dse.main()
+
+    print("\n==== Fig 9: Rodinia cycles over (warps x threads) ====")
+    from benchmarks import fig9_rodinia
+    stats = fig9_rodinia.run_all()
+    print("bench,config,cycles,normalized_to_2x2,instrs,dcache_miss_rate")
+    for name in fig9_rodinia.BENCHES:
+        base = stats[(name, 2, 2)]["cycles"]
+        for w, t in fig9_rodinia.CONFIGS:
+            s = stats[(name, w, t)]
+            mr = s["dcache_misses"] / max(
+                s["dcache_misses"] + s["dcache_hits"], 1)
+            print(f"{name},{w}w{t}t,{s['cycles']},"
+                  f"{s['cycles']/base:.3f},{s['instrs']},{mr:.3f}")
+
+    print("\n==== Fig 10: power efficiency ====")
+    from benchmarks import fig10_power
+    fig10_power.main(stats=stats)
+
+    print("\n==== Roofline table (from dry-run artifacts) ====")
+    from benchmarks import roofline_table
+    roofline_table.main()
+
+    print(f"\n# total benchmark wall time {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

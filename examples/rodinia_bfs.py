@@ -1,0 +1,23 @@
+"""Rodinia BFS on the Vortex SIMT machine: the paper's flagship irregular
+benchmark (§V-D) — sweeps warp counts to show latency hiding.
+
+    PYTHONPATH=src python examples/rodinia_bfs.py
+"""
+from repro.core.simt.machine import MachineConfig
+from repro.runtime.kernels_src import rodinia
+
+print("warps  threads  cycles   instrs  miss-rate  speedup-vs-2w")
+base = None
+for warps in (2, 4, 8, 16):
+    mc = MachineConfig(warps=warps, threads=4, max_cycles=12_000_000,
+                       miss_latency=200)
+    res, ok = rodinia.bfs(mc, n_nodes=384, avg_deg=4)
+    assert ok
+    s = res.stats
+    mr = s["dcache_misses"] / max(s["dcache_misses"] + s["dcache_hits"], 1)
+    base = base or s["cycles"]
+    print(f"{warps:5d}  {4:7d}  {s['cycles']:7d}  {s['instrs']:6d}  "
+          f"{mr:8.3f}  {base / s['cycles']:6.2f}x")
+print("\nBFS gets faster with more warps (memory-latency hiding) — the")
+print("paper's key §V-D observation; try the same sweep on saxpy to see")
+print("a regular kernel not care.")

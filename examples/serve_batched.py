@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests through the warp-scheduler
+engine (continuous batching; slots = warps).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+from repro.launch import serve as serve_driver
+
+if __name__ == "__main__":
+    sys.exit(serve_driver.main([
+        "--arch", "h2o-danube-1.8b", "--reduced",
+        "--requests", "10", "--slots", "4", "--max-new", "12",
+    ]))

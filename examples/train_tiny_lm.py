@@ -1,0 +1,27 @@
+"""End-to-end driver: train a small (~15M param) phi3-family model for a
+few hundred steps on CPU with checkpointing — deliverable (b)'s training
+driver in miniature.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    return train_driver.main([
+        "--arch", "phi3-mini-3.8b", "--reduced",
+        "--steps", str(args.steps), "--seq", "128", "--batch", "8",
+        "--microbatch", "4",
+        "--ckpt", "/tmp/vortex_tiny_lm_ckpt", "--ckpt-every", "100",
+        "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Hillclimb runner: lower a train cell with knob overrides and report the
+three roofline terms (writes JSON per iteration to experiments/hillclimb/).
+
+    PYTHONPATH=src python experiments/hillclimb.py <arch> <tag> \
+        key=value [key=value ...]
+Knobs: microbatch=<int> act_shard=1 seq_shard=1 ssm_chunk=<int>
+       moe_dispatch=sort|a2a remat=full|dots|none
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json      # noqa: E402
+import sys       # noqa: E402
+import time      # noqa: E402
+
+
+def run(arch: str, tag: str, knobs: dict):
+    from repro.launch import cells, dryrun
+    over = dict(knobs)
+    cells.ARCH_TRAIN_OVERRIDES[arch] = over
+    rec = dryrun.run_cell(arch, "train_4k", "single",
+                          out_dir="experiments/hillclimb")
+    r = rec["roofline"]
+    line = (f"{arch} [{tag}] {knobs}  dev={rec['per_device_bytes']/1e9:.2f}G "
+            f"fits={rec['fits_16g']} compile={rec['compile_s']}s\n"
+            f"   compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+            f"collective={r['collective_s']:.3f}s dom={r['dominant']} "
+            f"total={max(r['compute_s'], r['memory_s'], r['collective_s']):.3f}s "
+            f"mfu_bound={r['mfu_bound']:.4f}")
+    print(line, flush=True)
+    os.makedirs("experiments/hillclimb", exist_ok=True)
+    with open(f"experiments/hillclimb/{arch}_{tag}.json", "w") as f:
+        json.dump({"tag": tag, "knobs": {k: str(v) for k, v in knobs.items()},
+                   "record": rec}, f, indent=1)
+    return rec
+
+
+if __name__ == "__main__":
+    arch, tag = sys.argv[1], sys.argv[2]
+    knobs = {}
+    for kv in sys.argv[3:]:
+        k, v = kv.split("=")
+        knobs[k] = int(v) if v.lstrip("-").isdigit() else \
+            (v == "1" if v in ("0", "1") and k.endswith("shard") else v)
+    run(arch, tag, knobs)

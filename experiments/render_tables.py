@@ -1,0 +1,38 @@
+"""Render EXPERIMENTS.md roofline tables from dry-run JSON artifacts."""
+import glob
+import json
+import os
+import sys
+
+
+def fmt(x):
+    return f"{x:.2e}" if x < 0.01 or x >= 1000 else f"{x:.3f}"
+
+
+def table(dirpath, mesh):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, f"*_{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | "
+                        f"{r.get('status','?')} |||||||")
+            continue
+        ro = r["roofline"]
+        total = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(ro['compute_s'])} | "
+            f"{fmt(ro['memory_s'])} | {fmt(ro['collective_s'])} | "
+            f"{ro['dominant'][:4]} | {ro['useful_fraction']:.2f} | "
+            f"{ro['mfu_bound']:.4f} | {r['per_device_bytes']/1e9:.2f} | "
+            f"{'Y' if r['fits_16g'] else 'N'} |")
+    hdr = ("| arch | shape | compute s | memory s | collective s | dom | "
+           "useful | MFU-bound | GB/dev | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    for mesh in ("single", "multi"):
+        print(f"\n### mesh = {mesh}\n")
+        print(table(d, mesh))

@@ -1,0 +1,96 @@
+"""Checkpoint manager: keep-K retention, resume-from-latest-valid, async
+snapshots, preemption flush.
+
+Fault-tolerance contract (DESIGN.md §5):
+  * saves are step-atomic (store.py's tmp+rename protocol);
+  * restore scans newest -> oldest and takes the first checkpoint that
+    passes checksum verification, so a node that died mid-save (or a
+    corrupted object) costs at most the save interval;
+  * `async_save` snapshots device arrays to host (blocking, cheap) and
+    writes to disk on a worker thread so the train loop overlaps I/O;
+  * a SIGTERM handler (install_preemption_flush) forces a synchronous save
+    when the scheduler preempts the job.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import signal
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import store
+
+
+class CheckpointManager:
+    def __init__(self, dirpath: str, keep: int = 3):
+        self.dir = dirpath
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._last_state: Optional[Tuple[int, Any, Dict]] = None
+        self._lock = threading.Lock()
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
+        path = store.save(self.dir, step, tree, meta)
+        self._gc()
+        return path
+
+    def async_save(self, step: int, tree: Any,
+                   meta: Optional[Dict] = None) -> None:
+        """Snapshot to host now; write on a background thread."""
+        self.wait()
+        host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
+        with self._lock:
+            self._last_state = (step, host_tree, meta or {})
+
+        def work():
+            store.save(self.dir, step, host_tree, meta)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = store.list_steps(self.dir)
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def latest_valid_step(self) -> Optional[int]:
+        for s in reversed(store.list_steps(self.dir)):
+            if store.verify(os.path.join(self.dir, f"step_{s:08d}")):
+                return s
+        return None
+
+    def restore_latest(self, like: Any, shardings: Any = None
+                       ) -> Optional[Tuple[int, Any, Dict]]:
+        """(step, tree, meta) from the newest checkpoint that verifies, or
+        None if there is nothing to restore."""
+        s = self.latest_valid_step()
+        if s is None:
+            return None
+        tree, meta = store.restore(self.dir, s, like, shardings)
+        return s, tree, meta
+
+    # -- preemption ---------------------------------------------------------
+
+    def install_preemption_flush(self, get_state: Callable[[], Tuple[int, Any]]
+                                 ) -> None:
+        """On SIGTERM, synchronously flush a final checkpoint and exit."""
+        def handler(signum, frame):
+            self.wait()
+            step, tree = get_state()
+            store.save(self.dir, step, tree, {"preempted": True})
+            raise SystemExit(143)
+        signal.signal(signal.SIGTERM, handler)

@@ -1,0 +1,92 @@
+"""SIMT combinators: the paper's divergence machinery as JAX transforms.
+
+``simt_cond(pred, then_fn, else_fn, *args)`` executes a data-dependent
+branch over a *vector* of lanes the way the Vortex IPDOM hardware does:
+
+  * both paths run masked (divergent case: the serialized both-path
+    execution of §IV-C),
+  * with the **uniform-branch shortcut**: when the predicate is known
+    uniform at trace time (a scalar or a traced uniform hint), only one
+    path is emitted — "the split acts like a nop".
+
+On lockstep vector hardware (TPU vregs == the warp's lanes) this is the
+exact semantic transfer of split/join: thread mask -> jnp.where lane mask,
+IPDOM serialization -> sequential evaluation of the two masked paths.
+
+``masked_call`` predicates a function's writes like the thread-mask
+register: outputs are where(mask, f(x), x_identity).
+
+``barrier`` is the `bar %id,%numW` analogue: a psum token across a mesh
+axis, forcing a schedule point between grid steps (local barrier = in-pod
+axis, global barrier = the pod axis — the MSB-of-barID distinction).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def simt_cond(pred, then_fn: Callable, else_fn: Optional[Callable],
+              *args, uniform: Optional[bool] = None):
+    """Vectorized if/else with SIMT both-path semantics.
+
+    pred: bool array over lanes (leading dims broadcast against outputs).
+    then_fn/else_fn: lane-wise functions of *args.
+    uniform: static hint; True emits a single path via lax.cond on
+    pred-any (the split-is-a-nop shortcut — on TPU, a real runtime skip).
+    """
+    if isinstance(pred, bool) or (hasattr(pred, "ndim") and pred.ndim == 0
+                                  and uniform is None):
+        uniform = True
+    if uniform:
+        t = lambda ops: then_fn(*ops)
+        e = (lambda ops: else_fn(*ops)) if else_fn else (lambda ops: t(ops))
+        scalar = jnp.any(pred) if hasattr(pred, "ndim") else bool(pred)
+        if else_fn is None:
+            return jax.lax.cond(scalar, t, lambda ops: _zeros_like_out(
+                then_fn, ops), args)
+        return jax.lax.cond(scalar, t, e, args)
+
+    # divergent: serialize both paths with lane masks (IPDOM semantics)
+    t_out = then_fn(*args)
+    e_out = else_fn(*args) if else_fn else jax.tree.map(jnp.zeros_like, t_out)
+    def sel(a, b):
+        m = pred
+        while m.ndim < a.ndim:
+            m = m[..., None]
+        return jnp.where(m, a, b)
+    return jax.tree.map(sel, t_out, e_out)
+
+
+def _zeros_like_out(fn, ops):
+    shapes = jax.eval_shape(lambda o: fn(*o), ops)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def masked_call(mask, fn: Callable, x, *rest):
+    """Thread-mask predication: lanes where ~mask pass `x` through
+    unchanged (no register write, like a predicated-off lane).  When fn's
+    output structure differs from x, masked-off lanes produce zeros."""
+    y = fn(x, *rest)
+    same = jax.tree.structure(y) == jax.tree.structure(x)
+    fallback = x if same else jax.tree.map(jnp.zeros_like, y)
+
+    def sel(a, b):
+        m = mask
+        while m.ndim < a.ndim:
+            m = m[..., None]
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(sel, y, fallback)
+
+
+def barrier(x, axis_name: str):
+    """`bar` analogue inside shard_map: a zero-cost data dependency on a
+    psum across `axis_name` — forces every shard to reach this point
+    before any consumer of the result runs (local barrier = "data"/"model"
+    axis, global barrier = "pod")."""
+    token = jax.lax.psum(jnp.zeros((), x.dtype if hasattr(x, "dtype")
+                                   else jnp.float32), axis_name)
+    return jax.tree.map(lambda t: t + token.astype(t.dtype), x)

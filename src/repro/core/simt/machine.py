@@ -1,0 +1,654 @@
+"""simX-in-JAX: a cycle-level SIMT machine as a pure state transition.
+
+Implements the Vortex microarchitecture of §IV as a jit-able
+``lax.while_loop`` over cycles:
+
+  * 4-mask warp scheduler (scheduler.py) — one warp issues per cycle,
+  * per-warp thread masks predicating every register/memory write (§IV-C),
+  * per-warp IPDOM stacks with fall-through entries driving split/join,
+  * barrier table {count, release-mask} (§IV-D),
+  * RV32IM + Zfinx execute stage vectorized over the T lanes,
+  * a banked, 2-way set-associative data-cache *latency* model: a miss
+    stalls only the issuing warp, which is exactly the mechanism by which
+    more warps buy latency hiding (§V-D's BFS observation).
+
+Timing model (documented deviations from RTL): 1 instruction issued per
+cycle per core; I-cache always hits (the paper's own evaluation warms
+caches); divergent paths serialize via the IPDOM stack with both-path
+execution.  The paper reports simX within 6% of RTL; ours targets the same
+first-order behaviour, and the Fig-9/10 benchmarks reproduce the paper's
+*normalized* curves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simt import isa, scheduler
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+SMEM_BASE = 0x1000_0000     # shared-memory window
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineConfig:
+    warps: int = 8
+    threads: int = 4
+    ipdom_depth: int = 16
+    barriers: int = 4
+    dmem_words: int = 1 << 16          # 256 KB data memory
+    smem_words: int = 2 << 10          # 8 KB shared memory (paper config)
+    # cache geometry: 4 KB, 2-way, 4 banks, 16 B lines (paper config)
+    cache_lines: int = 256             # total lines
+    cache_ways: int = 2
+    cache_banks: int = 4
+    line_words: int = 4
+    miss_latency: int = 48             # cycles to HBM-ish memory
+    miss_pipeline: int = 4             # extra per additional missing line
+    max_cycles: int = 2_000_000
+
+    @property
+    def sets(self) -> int:
+        return self.cache_lines // self.cache_ways
+
+
+class State(NamedTuple):
+    pc: jax.Array              # [W] u32
+    active: jax.Array          # [W] bool
+    stalled_until: jax.Array   # [W] i32 (cycle when schedulable again)
+    at_barrier: jax.Array      # [W] bool
+    visible: jax.Array         # [W] bool
+    tmask: jax.Array           # [W,T] bool
+    gpr: jax.Array             # [W,T,32] i32
+    ipdom_pc: jax.Array        # [W,D] u32
+    ipdom_mask: jax.Array      # [W,D,T] bool
+    ipdom_ft: jax.Array        # [W,D] bool
+    ipdom_sp: jax.Array        # [W] i32
+    bar_count: jax.Array       # [NB] i32
+    bar_release: jax.Array     # [NB,W] bool
+    dmem: jax.Array            # [MW] i32
+    smem: jax.Array            # [SW] i32
+    tags: jax.Array            # [sets,ways] i32
+    tvalid: jax.Array          # [sets,ways] bool
+    lru: jax.Array             # [sets] i32 (way to evict next)
+    cycle: jax.Array           # i32
+    stats: Dict[str, jax.Array]
+
+
+STAT_KEYS = ("instrs", "stall_cycles", "idle_cycles", "dcache_hits",
+             "dcache_misses", "bank_conflict_cycles", "divergent_splits",
+             "uniform_splits", "joins", "barrier_waits",
+             "divergence_violations", "loads", "stores")
+
+
+def init_state(mc: MachineConfig, dmem_image: Optional[np.ndarray] = None
+               ) -> State:
+    W, T, D = mc.warps, mc.threads, mc.ipdom_depth
+    dmem = jnp.zeros(mc.dmem_words, I32)
+    if dmem_image is not None:
+        img = jnp.asarray(dmem_image, I32)
+        dmem = dmem.at[: img.shape[0]].set(img)
+    tmask0 = jnp.zeros((W, T), bool).at[0, 0].set(True)   # warp0/lane0 boots
+    return State(
+        pc=jnp.zeros(W, U32),
+        active=jnp.zeros(W, bool).at[0].set(True),
+        stalled_until=jnp.zeros(W, I32),
+        at_barrier=jnp.zeros(W, bool),
+        visible=jnp.zeros(W, bool),
+        tmask=tmask0,
+        gpr=jnp.zeros((W, T, 32), I32),
+        ipdom_pc=jnp.zeros((W, D), U32),
+        ipdom_mask=jnp.zeros((W, D, T), bool),
+        ipdom_ft=jnp.zeros((W, D), bool),
+        ipdom_sp=jnp.zeros(W, I32),
+        bar_count=jnp.zeros(mc.barriers, I32),
+        bar_release=jnp.zeros((mc.barriers, W), bool),
+        dmem=dmem,
+        smem=jnp.zeros(mc.smem_words, I32),
+        tags=jnp.zeros((mc.sets, mc.cache_ways), I32),
+        tvalid=jnp.zeros((mc.sets, mc.cache_ways), bool),
+        lru=jnp.zeros(mc.sets, I32),
+        cycle=jnp.int32(0),
+        stats={k: jnp.int32(0) for k in STAT_KEYS},
+    )
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _sext(v, bits):
+    shift = 32 - bits
+    return (v.astype(I32) << shift) >> shift
+
+
+def _decode(instr):
+    i = instr.astype(U32)
+    opcode = (i & 0x7F).astype(I32)
+    rd = ((i >> 7) & 31).astype(I32)
+    funct3 = ((i >> 12) & 7).astype(I32)
+    rs1 = ((i >> 15) & 31).astype(I32)
+    rs2 = ((i >> 20) & 31).astype(I32)
+    funct7 = ((i >> 25) & 0x7F).astype(I32)
+    imm_i = _sext((i >> 20).astype(I32), 12)
+    imm_s = _sext((((i >> 25) & 0x7F) << 5 | ((i >> 7) & 31)).astype(I32), 12)
+    imm_b = _sext(((((i >> 31) & 1) << 12) | (((i >> 7) & 1) << 11)
+                   | (((i >> 25) & 0x3F) << 5)
+                   | (((i >> 8) & 0xF) << 1)).astype(I32), 13)
+    imm_u = (i & jnp.uint32(0xFFFFF000)).astype(I32)
+    imm_j = _sext(((((i >> 31) & 1) << 20) | (((i >> 12) & 0xFF) << 12)
+                   | (((i >> 20) & 1) << 11)
+                   | (((i >> 21) & 0x3FF) << 1)).astype(I32), 21)
+    return dict(opcode=opcode, rd=rd, funct3=funct3, rs1=rs1, rs2=rs2,
+                funct7=funct7, imm_i=imm_i, imm_s=imm_s, imm_b=imm_b,
+                imm_u=imm_u, imm_j=imm_j, raw=i)
+
+
+def _write_rd(gpr, w, rd, val, lane_mask):
+    """Predicated per-lane GPR write; x0 stays zero."""
+    ok = lane_mask & (rd != 0)
+    cur = gpr[w, :, rd]
+    return gpr.at[w, :, rd].set(jnp.where(ok, val.astype(I32), cur))
+
+
+def _first_active(vals, mask):
+    """Value from the lowest active lane (warp-uniform reads)."""
+    idx = jnp.argmax(mask)
+    return vals[idx]
+
+
+def _dcache_access(mc: MachineConfig, tags, tvalid, lru, addrs, mask):
+    """Vectorized cache model.  Returns (tags', tvalid', lru', n_miss_lines,
+    bank_extra_cycles, n_hits)."""
+    T = addrs.shape[0]
+    line = (addrs.astype(U32) >> (2 + 2)).astype(I32)   # 16B lines
+    set_ = line & (mc.sets - 1)
+    tag = line >> int(np.log2(mc.sets))
+    way_hit = (tvalid[set_] & (tags[set_] == tag[:, None]))   # [T,ways]
+    hit = way_hit.any(axis=1) & mask
+    miss = mask & ~hit
+
+    # unique missing lines (first occurrence only)
+    eq = line[:, None] == line[None, :]
+    earlier = jnp.tril(jnp.ones((T, T), bool), -1)
+    dup = (eq & earlier & mask[None, :]).any(axis=1)
+    uniq_miss = miss & ~dup
+    n_miss = uniq_miss.sum().astype(I32)
+    n_hit = (hit & ~dup).sum().astype(I32)
+
+    # fill missing lines into the LRU way of their set.  Non-writing lanes
+    # are redirected out of bounds and dropped — a passthrough write at a
+    # duplicate (set, way) would otherwise clobber the fill (scatter
+    # duplicates resolve last-wins).
+    fill_way = lru[set_]
+    set_fill = jnp.where(uniq_miss, set_, mc.sets)
+    tags = tags.at[set_fill, fill_way].set(tag, mode="drop")
+    tvalid = tvalid.at[set_fill, fill_way].set(True, mode="drop")
+    # LRU flip: on hit or fill, evict the other way next
+    used_way = jnp.where(hit, jnp.argmax(way_hit, axis=1).astype(I32),
+                         fill_way)
+    touched = (hit | uniq_miss)
+    set_touch = jnp.where(touched, set_, mc.sets)
+    lru = lru.at[set_touch].set(1 - used_way, mode="drop")
+
+    # line-granular banking: serialized accesses per bank
+    bank = line & (mc.cache_banks - 1)
+    uniq = mask & ~dup
+    counts = jnp.zeros(mc.cache_banks, I32).at[bank].add(
+        uniq.astype(I32), mode="drop")
+    extra = jnp.maximum(counts.max() - 1, 0)
+    return tags, tvalid, lru, n_miss, extra.astype(I32), n_hit
+
+
+# ---------------------------------------------------------------------------
+# ALU groups (vectorized over lanes)
+# ---------------------------------------------------------------------------
+
+def _bits(x):
+    return x.astype(U32)
+
+
+def _alu_int(funct3, sub_or_sra, a, b):
+    sh = (_bits(b) & 31).astype(U32)
+    variants = jnp.stack([
+        jnp.where(sub_or_sra, a - b, a + b),                   # 0 add/sub
+        (_bits(a) << sh).astype(I32),                          # 1 sll
+        (a < b).astype(I32),                                   # 2 slt
+        (_bits(a) < _bits(b)).astype(I32),                     # 3 sltu
+        a ^ b,                                                 # 4 xor
+        jnp.where(sub_or_sra, a >> sh.astype(I32),             # 5 srl/sra
+                  (_bits(a) >> sh).astype(I32)),
+        a | b,                                                 # 6 or
+        a & b,                                                 # 7 and
+    ])
+    return variants[funct3]
+
+
+def _mulhu(a, b):
+    au, bu = _bits(a), _bits(b)
+    a0, a1 = au & 0xFFFF, au >> 16
+    b0, b1 = bu & 0xFFFF, bu >> 16
+    t = a1 * b0 + ((a0 * b0) >> 16)
+    w1, w2 = t & 0xFFFF, t >> 16
+    t2 = a0 * b1 + w1
+    return (a1 * b1 + w2 + (t2 >> 16)).astype(I32)
+
+
+def _alu_m(funct3, a, b):
+    zero_b = b == 0
+    ovf = (a == jnp.int32(-2**31)) & (b == -1)
+    safe_b = jnp.where(zero_b | ovf, 1, b)
+    q = a // safe_b
+    # jnp floor-divides; RISC-V truncates toward zero
+    q = jnp.where((a % safe_b != 0) & ((a < 0) ^ (safe_b < 0)), q + 1, q)
+    r = a - q * safe_b
+    qu = (_bits(a) // jnp.where(zero_b, 1, _bits(b))).astype(I32)
+    ru = (_bits(a) % jnp.where(zero_b, 1, _bits(b))).astype(I32)
+    mulhu = _mulhu(a, b)
+    mulh = (mulhu - jnp.where(a < 0, b, 0) - jnp.where(b < 0, a, 0)).astype(I32)
+    mulhsu = (mulhu - jnp.where(a < 0, b, 0)).astype(I32)
+    variants = jnp.stack([
+        a * b,                                                  # 0 mul
+        mulh,                                                   # 1 mulh
+        mulhsu,                                                 # 2 mulhsu
+        mulhu,                                                  # 3 mulhu
+        jnp.where(zero_b, -1, jnp.where(ovf, jnp.int32(-2**31), q)),  # 4 div
+        jnp.where(zero_b, -1, qu),                              # 5 divu
+        jnp.where(zero_b, a, jnp.where(ovf, 0, r)),             # 6 rem
+        jnp.where(zero_b, _bits(a).astype(I32), ru),            # 7 remu
+    ])
+    return variants[funct3]
+
+
+def _alu_fp(funct7, funct3, a, b):
+    fa = jax.lax.bitcast_convert_type(a, jnp.float32)
+    fb = jax.lax.bitcast_convert_type(b, jnp.float32)
+
+    def f2i(x):
+        return jax.lax.bitcast_convert_type(x.astype(jnp.float32), I32)
+
+    add = f2i(fa + fb)
+    sub = f2i(fa - fb)
+    mul = f2i(fa * fb)
+    div = f2i(fa / fb)
+    sqrt = f2i(jnp.sqrt(fa))
+    mn = f2i(jnp.minimum(fa, fb))
+    mx = f2i(jnp.maximum(fa, fb))
+    fle = (fa <= fb).astype(I32)
+    flt = (fa < fb).astype(I32)
+    feq = (fa == fb).astype(I32)
+    w_s = jnp.clip(jnp.trunc(fa), -2.0**31, 2.0**31 - 1).astype(I32)
+    s_w = f2i(a.astype(jnp.float32))
+    # select on funct7 (and funct3 inside the cmp/minmax groups)
+    out = add
+    out = jnp.where(funct7 == 0x04, sub, out)
+    out = jnp.where(funct7 == 0x08, mul, out)
+    out = jnp.where(funct7 == 0x0C, div, out)
+    out = jnp.where(funct7 == 0x2C, sqrt, out)
+    out = jnp.where((funct7 == 0x14) & (funct3 == 0), mn, out)
+    out = jnp.where((funct7 == 0x14) & (funct3 == 1), mx, out)
+    out = jnp.where((funct7 == 0x50) & (funct3 == 0), fle, out)
+    out = jnp.where((funct7 == 0x50) & (funct3 == 1), flt, out)
+    out = jnp.where((funct7 == 0x50) & (funct3 == 2), feq, out)
+    out = jnp.where(funct7 == 0x60, w_s, out)
+    out = jnp.where(funct7 == 0x68, s_w, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the cycle step
+# ---------------------------------------------------------------------------
+
+_GROUP_IDS = {isa.OP_LUI: 1, isa.OP_AUIPC: 2, isa.OP_JAL: 3, isa.OP_JALR: 4,
+              isa.OP_BRANCH: 5, isa.OP_LOAD: 6, isa.OP_STORE: 7,
+              isa.OP_IMM: 8, isa.OP_OP: 9, isa.OP_SYSTEM: 10,
+              isa.OP_FP: 11, isa.OP_CUSTOM0: 12}
+_N_GROUPS = 14      # 0 = idle, 13 = invalid
+
+
+def _group_table() -> np.ndarray:
+    t = np.full(128, 13, np.int32)
+    for opc, gid in _GROUP_IDS.items():
+        t[opc] = gid
+    return t
+
+
+def make_step(mc: MachineConfig):
+    W, T = mc.warps, mc.threads
+    gtab = jnp.asarray(_group_table())
+    lane_iota = jnp.arange(T, dtype=I32)
+
+    def step(st: State, imem: jax.Array) -> State:
+        stalled = st.stalled_until > st.cycle
+        wid, visible = scheduler.step_masks(st.visible, st.active, stalled,
+                                            st.at_barrier)
+        issued = wid < W
+        w = jnp.minimum(wid, W - 1)          # safe index even when idle
+        pc = st.pc[w]
+        instr = imem[(pc >> 2).astype(I32) % imem.shape[0]]
+        d = _decode(instr)
+        lanes = st.tmask[w]
+        rs1v = st.gpr[w, :, d["rs1"]]
+        rs2v = st.gpr[w, :, d["rs2"]]
+        rs1_u = _first_active(rs1v, lanes)
+        rs2_u = _first_active(rs2v, lanes)
+        pc4 = pc + 4
+
+        st = st._replace(visible=visible)
+
+        def bump(stats, **kw):
+            out = dict(stats)
+            for k, v in kw.items():
+                out[k] = out[k] + v
+            return out
+
+        # ---- group handlers ------------------------------------------------
+        def h_idle(s: State) -> State:
+            return s._replace(stats=bump(s.stats, idle_cycles=1))
+
+        def h_lui(s):
+            g = _write_rd(s.gpr, w, d["rd"],
+                          jnp.broadcast_to(d["imm_u"], (T,)), lanes)
+            return s._replace(gpr=g, pc=s.pc.at[w].set(pc4))
+
+        def h_auipc(s):
+            val = jnp.broadcast_to(pc.astype(I32) + d["imm_u"], (T,))
+            g = _write_rd(s.gpr, w, d["rd"], val, lanes)
+            return s._replace(gpr=g, pc=s.pc.at[w].set(pc4))
+
+        def h_jal(s):
+            g = _write_rd(s.gpr, w, d["rd"],
+                          jnp.broadcast_to(pc4.astype(I32), (T,)), lanes)
+            return s._replace(gpr=g, pc=s.pc.at[w].set(
+                (pc.astype(I32) + d["imm_j"]).astype(U32)))
+
+        def h_jalr(s):
+            g = _write_rd(s.gpr, w, d["rd"],
+                          jnp.broadcast_to(pc4.astype(I32), (T,)), lanes)
+            tgt = ((rs1_u + d["imm_i"]) & ~1).astype(U32)
+            return s._replace(gpr=g, pc=s.pc.at[w].set(tgt))
+
+        def h_branch(s):
+            lt = rs1v < rs2v
+            ltu = _bits(rs1v) < _bits(rs2v)
+            eq = rs1v == rs2v
+            cmp = jnp.stack([eq, ~eq, eq, eq, lt, ~lt, ltu, ~ltu])[d["funct3"]]
+            take = _first_active(cmp, lanes)
+            viol = jnp.any((cmp != take) & lanes).astype(I32)
+            npc = jnp.where(take, (pc.astype(I32) + d["imm_b"]).astype(U32),
+                            pc4)
+            return s._replace(
+                pc=s.pc.at[w].set(npc),
+                stats=bump(s.stats, divergence_violations=viol))
+
+        def _mem_common(s, addrs, is_store):
+            """Cache/banking timing shared by loads & stores."""
+            is_sm = _bits(addrs) >= SMEM_BASE
+            dm_mask = lanes & ~is_sm
+            tags, tvalid, lru, n_miss, extra, n_hit = _dcache_access(
+                mc, s.tags, s.tvalid, s.lru, addrs, dm_mask)
+            # smem: word-granular banks
+            sm_word = (_bits(addrs) - SMEM_BASE) >> 2
+            sm_bank = (sm_word & (mc.cache_banks - 1)).astype(I32)
+            sm_counts = jnp.zeros(mc.cache_banks, I32).at[sm_bank].add(
+                (lanes & is_sm).astype(I32), mode="drop")
+            sm_extra = jnp.maximum(sm_counts.max() - 1, 0)
+            stall = jnp.where(
+                n_miss > 0,
+                mc.miss_latency + (n_miss - 1) * mc.miss_pipeline,
+                0) + extra + sm_extra
+            s = s._replace(
+                tags=tags, tvalid=tvalid, lru=lru,
+                stalled_until=jnp.where(
+                    stall > 0,
+                    s.stalled_until.at[w].set(s.cycle + 1 + stall),
+                    s.stalled_until),
+                stats=bump(s.stats, dcache_misses=n_miss, dcache_hits=n_hit,
+                           stall_cycles=stall,
+                           bank_conflict_cycles=extra + sm_extra,
+                           loads=jnp.where(is_store, 0, 1),
+                           stores=jnp.where(is_store, 1, 0)))
+            return s, is_sm
+
+        def h_load(s):
+            addrs = rs1v + d["imm_i"]
+            s, is_sm = _mem_common(s, addrs, jnp.bool_(False))
+            widx = (_bits(addrs) >> 2).astype(I32) % mc.dmem_words
+            sidx = ((_bits(addrs) - SMEM_BASE) >> 2).astype(I32) % mc.smem_words
+            word = jnp.where(is_sm, s.smem[sidx], s.dmem[widx])
+            sh = ((_bits(addrs) & 3) * 8).astype(U32)
+            b = ((_bits(word) >> sh) & 0xFF).astype(I32)
+            h_ = ((_bits(word) >> (sh & ~jnp.uint32(8))) & 0xFFFF).astype(I32)
+            val = jnp.stack([
+                _sext(b, 8), _sext(h_, 16), word, word,
+                b, h_, word, word])[d["funct3"]]
+            g = _write_rd(s.gpr, w, d["rd"], val, lanes)
+            return s._replace(gpr=g, pc=s.pc.at[w].set(pc4))
+
+        def h_store(s):
+            addrs = rs1v + d["imm_s"]
+            s, is_sm = _mem_common(s, addrs, jnp.bool_(True))
+            widx = (_bits(addrs) >> 2).astype(I32) % mc.dmem_words
+            sidx = ((_bits(addrs) - SMEM_BASE) >> 2).astype(I32) % mc.smem_words
+            old = jnp.where(is_sm, s.smem[sidx], s.dmem[widx])
+            sh = ((_bits(addrs) & 3) * 8).astype(U32)
+            full = jnp.broadcast_to(jnp.uint32(0xFFFFFFFF), sh.shape)
+            bmask = jnp.stack([jnp.uint32(0xFF) << sh,
+                               jnp.uint32(0xFFFF) << sh,
+                               full, full])[d["funct3"] % 4]
+            newv = ((_bits(old) & ~bmask)
+                    | ((_bits(rs2v) << sh) & bmask)).astype(I32)
+            dm = s.dmem.at[widx].set(
+                jnp.where(lanes & ~is_sm, newv, s.dmem[widx]), mode="drop")
+            sm = s.smem.at[sidx].set(
+                jnp.where(lanes & is_sm, newv, s.smem[sidx]), mode="drop")
+            return s._replace(dmem=dm, smem=sm, pc=s.pc.at[w].set(pc4))
+
+        def h_opimm(s):
+            is_sra = (d["funct3"] == 5) & ((d["imm_i"] >> 10) & 1) == 1
+            b = jnp.broadcast_to(d["imm_i"], (T,))
+            val = _alu_int(d["funct3"], is_sra, rs1v, b)
+            g = _write_rd(s.gpr, w, d["rd"], val, lanes)
+            return s._replace(gpr=g, pc=s.pc.at[w].set(pc4))
+
+        def h_op(s):
+            is_m = d["funct7"] == 1
+            sub_sra = d["funct7"] == 0x20
+            val = jnp.where(is_m, _alu_m(d["funct3"], rs1v, rs2v),
+                            _alu_int(d["funct3"], sub_sra, rs1v, rs2v))
+            g = _write_rd(s.gpr, w, d["rd"], val, lanes)
+            return s._replace(gpr=g, pc=s.pc.at[w].set(pc4))
+
+        def h_system(s):
+            csr = d["imm_i"] & 0xFFF
+            val = jnp.broadcast_to(jnp.int32(0), (T,))
+            val = jnp.where(csr == isa.CSR_TID, lane_iota, val)
+            val = jnp.where(csr == isa.CSR_WID, w, val)
+            val = jnp.where(csr == isa.CSR_NT, T, val)
+            val = jnp.where(csr == isa.CSR_NW, W, val)
+            val = jnp.where(csr == isa.CSR_CYCLE, s.cycle, val)
+            is_csr = d["funct3"] != 0
+            g = jnp.where(is_csr, _write_rd(s.gpr, w, d["rd"], val, lanes),
+                          s.gpr)
+            # ecall = warp exit
+            act = jnp.where(is_csr, s.active, s.active.at[w].set(False))
+            return s._replace(gpr=g, active=act, pc=s.pc.at[w].set(pc4))
+
+        def h_fp(s):
+            val = _alu_fp(d["funct7"], d["funct3"], rs1v, rs2v)
+            g = _write_rd(s.gpr, w, d["rd"], val, lanes)
+            return s._replace(gpr=g, pc=s.pc.at[w].set(pc4))
+
+        def h_vortex(s):
+            f3 = d["funct3"]
+
+            def vx_tmc(s):
+                n = jnp.clip(rs1_u, 0, T)
+                newmask = lane_iota < n
+                act = jnp.where(n == 0, s.active.at[w].set(False), s.active)
+                return s._replace(tmask=s.tmask.at[w].set(newmask),
+                                  active=act, pc=s.pc.at[w].set(pc4))
+
+            def vx_wspawn(s):
+                nw = jnp.clip(rs1_u, 0, W)
+                widx = jnp.arange(W, dtype=I32)
+                spawn = (widx < nw) & ~s.active & (widx != w)
+                act = s.active | spawn
+                pcs = jnp.where(spawn, _bits(rs2_u), s.pc)
+                tm = jnp.where(spawn[:, None], lane_iota[None, :] == 0,
+                               s.tmask)
+                return s._replace(active=act, pc=pcs.at[w].set(pc4), tmask=tm)
+
+            def vx_split(s):
+                """§IV-C with the fused else-target.  Empty-mask paths are
+                never executed (a warp with zero active lanes cannot make
+                progress through register-controlled loops):
+                  all-false  -> jump straight to the else target; push only
+                                the fall-through entry ("split is a nop" on
+                                the mask, per the paper)
+                  otherwise  -> push {fall-through, else(ntaken, tgt)} and
+                                run the then-path with the taken mask; an
+                                all-true split leaves the mask unchanged
+                                and the empty else-entry is skipped by join.
+                """
+                pred = (rs1v != 0) & lanes
+                ntaken = (rs1v == 0) & lanes
+                any_t = jnp.any(pred)
+                divergent = any_t & jnp.any(ntaken)
+                sp = s.ipdom_sp[w]
+                else_pc = (pc.astype(I32) + d["imm_b"]).astype(U32)
+
+                # fall-through entry always pushed
+                ipdom_mask = s.ipdom_mask.at[w, sp].set(lanes)
+                ipdom_ft = s.ipdom_ft.at[w, sp].set(True)
+                ipdom_pc = s.ipdom_pc.at[w, sp].set(pc4)
+                # else entry only when some lane takes the then-path
+                sp1 = sp + 1
+                ipdom_mask = ipdom_mask.at[w, sp1].set(
+                    jnp.where(any_t, ntaken, ipdom_mask[w, sp1]))
+                ipdom_ft = ipdom_ft.at[w, sp1].set(
+                    jnp.where(any_t, False, ipdom_ft[w, sp1]))
+                ipdom_pc = ipdom_pc.at[w, sp1].set(
+                    jnp.where(any_t, else_pc, ipdom_pc[w, sp1]))
+
+                new_sp = sp + jnp.where(any_t, 2, 1)
+                new_mask = jnp.where(any_t, pred, lanes)
+                new_pc = jnp.where(any_t, pc4, else_pc)
+                return s._replace(
+                    ipdom_mask=ipdom_mask, ipdom_ft=ipdom_ft,
+                    ipdom_pc=ipdom_pc,
+                    ipdom_sp=s.ipdom_sp.at[w].set(new_sp),
+                    tmask=s.tmask.at[w].set(new_mask),
+                    pc=s.pc.at[w].set(new_pc),
+                    stats=bump(s.stats,
+                               divergent_splits=divergent.astype(I32),
+                               uniform_splits=(~divergent).astype(I32)))
+
+            def vx_join(s):
+                """Pop; if the popped else-entry is EMPTY (all-true split),
+                pop the fall-through too and jump to the reconvergence
+                offset carried in the join's imm — the else block is
+                skipped entirely, mirroring the paper's re-executed-branch
+                mechanism without ever running a zero-lane path."""
+                sp0 = s.ipdom_sp[w]
+                empty_stack = sp0 == 0
+                sp1 = jnp.maximum(sp0 - 1, 0)
+                top_mask = s.ipdom_mask[w, sp1]
+                top_ft = s.ipdom_ft[w, sp1]
+                top_pc = s.ipdom_pc[w, sp1]
+                top_empty = ~jnp.any(top_mask) & ~top_ft
+                sp2 = jnp.maximum(sp0 - 2, 0)
+                ft_mask = s.ipdom_mask[w, sp2]
+                reconv = (pc.astype(I32) + d["imm_b"]).astype(U32)
+
+                new_sp = jnp.where(empty_stack, 0,
+                                   jnp.where(top_empty, sp2, sp1))
+                new_mask = jnp.where(
+                    empty_stack, s.tmask[w],
+                    jnp.where(top_empty, ft_mask, top_mask))
+                new_pc = jnp.where(
+                    empty_stack, pc4,
+                    jnp.where(top_empty, reconv,
+                              jnp.where(top_ft, pc4, top_pc)))
+                return s._replace(
+                    ipdom_sp=s.ipdom_sp.at[w].set(new_sp),
+                    tmask=s.tmask.at[w].set(new_mask),
+                    pc=s.pc.at[w].set(new_pc),
+                    stats=bump(s.stats, joins=1))
+
+            def vx_bar(s):
+                bid = (rs1_u & (mc.barriers - 1)).astype(I32)
+                need = rs2_u
+                cnt = s.bar_count[bid] + 1
+                rel = s.bar_release.at[bid, w].set(True)
+                done = cnt >= need
+                at_bar = jnp.where(
+                    done, s.at_barrier & ~rel[bid],
+                    s.at_barrier.at[w].set(True))
+                return s._replace(
+                    bar_count=s.bar_count.at[bid].set(
+                        jnp.where(done, 0, cnt)),
+                    bar_release=jnp.where(done, rel.at[bid].set(False), rel),
+                    at_barrier=at_bar,
+                    pc=s.pc.at[w].set(pc4),
+                    stats=bump(s.stats, barrier_waits=(~done).astype(I32)))
+
+            return jax.lax.switch(jnp.clip(f3, 0, 4),
+                                  [vx_tmc, vx_wspawn, vx_split, vx_join,
+                                   vx_bar], s)
+
+        def h_invalid(s):
+            # fault: halt the warp (prevents runaway on bad fetch)
+            return s._replace(active=s.active.at[w].set(False),
+                              pc=s.pc.at[w].set(pc4))
+
+        handlers = [h_idle, h_lui, h_auipc, h_jal, h_jalr, h_branch, h_load,
+                    h_store, h_opimm, h_op, h_system, h_fp, h_vortex,
+                    h_invalid]
+        gid = jnp.where(issued, gtab[d["opcode"] % 128], 0)
+        st = jax.lax.switch(gid, handlers, st)
+        return st._replace(
+            cycle=st.cycle + 1,
+            stats=bump(st.stats, instrs=issued.astype(I32)))
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# run loop
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_jit(mc: MachineConfig, imem: jax.Array, st: State) -> State:
+    step = make_step(mc)
+
+    def cond(s: State):
+        return jnp.any(s.active) & (s.cycle < mc.max_cycles)
+
+    return jax.lax.while_loop(cond, lambda s: step(s, imem), st)
+
+
+def run(mc: MachineConfig, program: np.ndarray,
+        dmem_image: Optional[np.ndarray] = None,
+        state: Optional[State] = None) -> State:
+    """Run `program` (np.uint32 words) to completion; returns final State."""
+    st = state if state is not None else init_state(mc, dmem_image)
+    imem = jnp.asarray(np.asarray(program, np.uint32))
+    return _run_jit(mc, imem, st)
+
+
+def stats_dict(st: State) -> Dict[str, int]:
+    d = {k: int(v) for k, v in st.stats.items()}
+    d["cycles"] = int(st.cycle)
+    return d
+
+
+def read_words(st: State, addr: int, n: int) -> np.ndarray:
+    return np.asarray(st.dmem[addr // 4: addr // 4 + n])

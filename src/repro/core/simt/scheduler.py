@@ -1,0 +1,55 @@
+"""Warp scheduler: the paper's 4-mask design (§IV-B, Fig 6).
+
+Masks (all [W] bool):
+  active   — warp holds work (set by wspawn, cleared by tmc 0 / ecall)
+  stalled  — temporarily unschedulable (memory miss, decode-stall);
+             here: stalled_until > cycle
+  barrier  — parked on a warp barrier until the release mask fires
+  visible  — the hierarchical-scheduling window [18]: each cycle one warp
+             is picked from `visible` and invalidated; when `visible`
+             drains, it refills from active & ~stalled & ~barrier.
+
+Pure mask algebra — unit-tested against the three Fig 6 scenarios.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def schedulable(active, stalled, barrier):
+    return active & ~stalled & ~barrier
+
+
+def refill_if_empty(visible, active, stalled, barrier):
+    """When the visible window holds no schedulable warp, refill it from
+    the schedulable set (Fig 6a cycle 3; Fig 6c's wspawn pickup happens
+    here too, because the spawned warps joined `active`).  Stalled /
+    barrier-parked warps are masked out of the window every cycle
+    (Fig 6b), so a window full of newly-stalled warps refills immediately
+    instead of burning a bubble cycle."""
+    sched = schedulable(active, stalled, barrier)
+    masked = visible & sched
+    return jnp.where(jnp.any(masked), masked, sched)
+
+
+def select(visible) -> Tuple[jax.Array, jax.Array]:
+    """Pick the lowest-id visible warp; invalidate it (Fig 6a cycle 1->2).
+
+    Returns (warp_id, new_visible).  warp_id == W (out of range) when no
+    warp is schedulable this cycle (pure stall cycle)."""
+    W = visible.shape[0]
+    any_v = jnp.any(visible)
+    wid = jnp.where(any_v, jnp.argmax(visible), W)
+    new_visible = visible & ~(jax.lax.broadcasted_iota(
+        jnp.int32, (W,), 0) == wid)
+    return wid.astype(jnp.int32), new_visible
+
+
+def step_masks(visible, active, stalled, barrier):
+    """One scheduling decision: refill-if-empty then select.
+    Returns (warp_id, new_visible)."""
+    visible = refill_if_empty(visible, active, stalled, barrier)
+    return select(visible)

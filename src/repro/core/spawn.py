@@ -1,0 +1,92 @@
+"""grid_spawn: pocl_spawn for the TPU mesh.
+
+The paper's 5-step work-group mapping (§III-A.3), with the mesh's devices
+playing the warps:
+
+  1. query resources           -> mesh axis sizes
+  2. divide the work           -> ceil-split the flat grid over devices
+  3. assign ID ranges          -> each device gets a contiguous id range
+  4. spawn warps / set masks   -> shard_map launches the per-device program;
+                                  out-of-range ids get a zero lane mask
+  5. per-warp loop over ids    -> lax.scan over the device's chunk, the
+                                  kernel sees (global_id, valid_mask)
+
+Kernels are rank-polymorphic JAX functions f(gid, is_valid, *operands) ->
+pytree; invalid lanes must be neutral (the mask predicates every write,
+like the hardware thread mask).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def grid_spawn(kernel: Callable, n_items: int, *, mesh: Optional[Mesh] = None,
+               axis_names: Optional[Sequence[str]] = None,
+               items_per_step: int = 1,
+               init: Any = None) -> Callable:
+    """Build a launcher for `kernel` over a flat grid of n_items.
+
+    kernel(carry, gids [items_per_step], valid [items_per_step]) -> carry
+    The launcher returns the final carry, combined across devices by the
+    caller (carries are device-local partials, exactly like per-warp
+    accumulators the host reduces after a Vortex launch).
+
+    Without a mesh this degrades to a single "warp" running the whole
+    grid — the same code path tests use on CPU.
+    """
+    n_dev = 1
+    if mesh is not None:
+        axis_names = tuple(axis_names or mesh.axis_names)
+        for a in axis_names:
+            n_dev *= mesh.shape[a]
+    chunk = math.ceil(n_items / n_dev)
+    steps = math.ceil(chunk / items_per_step)
+
+    def device_program(dev_id, carry):
+        base = dev_id * chunk
+
+        def step(c, i):
+            gids = base + i * items_per_step + jnp.arange(items_per_step)
+            # valid = inside the global grid AND inside this device's
+            # assigned range (ranges don't overlap even when
+            # items_per_step doesn't divide the chunk)
+            valid = (gids < n_items) & (gids < base + chunk)
+            return kernel(c, gids, valid), None
+
+        out, _ = jax.lax.scan(step, carry, jnp.arange(steps))
+        return out
+
+    if mesh is None:
+        return lambda carry=init: device_program(jnp.int32(0), carry)
+
+    def launcher(carry=init):
+        def shard_fn(c):
+            idx = jnp.int32(0)
+            mul = 1
+            for a in reversed(axis_names):
+                idx = idx + jax.lax.axis_index(a) * mul
+                mul *= mesh.shape[a]
+            out = device_program(idx, c)
+            # expose per-device partials on a leading axis (the host
+            # combines them, like reading back per-warp accumulators)
+            return jax.tree.map(lambda t: jnp.asarray(t)[None], out)
+
+        return jax.shard_map(shard_fn, mesh=mesh,
+                             in_specs=P(),
+                             out_specs=P(tuple(axis_names)),
+                             check_vma=False)(carry)
+
+    return launcher
+
+
+def spawn_ranges(n_items: int, n_dev: int) -> Tuple[Tuple[int, int], ...]:
+    """Step 3 in host form: the contiguous [start, end) id range per device
+    (used by tests and the data loader's shard addressing)."""
+    chunk = math.ceil(n_items / max(n_dev, 1))
+    return tuple((min(d * chunk, n_items), min((d + 1) * chunk, n_items))
+                 for d in range(n_dev))

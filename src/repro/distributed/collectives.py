@@ -1,0 +1,59 @@
+"""Collective helpers: overlap-friendly patterns for shard_map code.
+
+XLA already overlaps pjit collectives with compute where dependencies
+allow (async all-gather/reduce-scatter start/done pairs); these helpers
+give the shard_map code paths the same structure explicitly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_all_gather(x: jax.Array, axis_name: str, axis: int = 0):
+    """Explicit ring all-gather via ppermute — each hop can overlap with
+    the caller's per-chunk compute (see overlapped_matmul)."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    chunks = [x]
+    cur = x
+    for _ in range(n - 1):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        chunks.append(cur)
+    idx = jax.lax.axis_index(axis_name)
+    # order chunks by true source = (idx - hop) mod n
+    ordered = [None] * n
+    for hop, c in enumerate(chunks):
+        ordered[hop] = c
+    # roll so that source order is global: source of chunk at hop h is
+    # (idx - h) mod n; consumers that need positional order roll outside.
+    return jnp.concatenate(ordered, axis=axis)
+
+
+def overlapped_matmul(x: jax.Array, w: jax.Array, axis_name: str):
+    """y = x @ all_gather(w, axis=0) with per-hop overlap: multiply the
+    resident shard while the next shard is in flight (the collective-
+    compute overlap trick the perf pass uses on the FSDP gather)."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x @ w
+    d_shard = w.shape[0]
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    idx = jax.lax.axis_index(axis_name)
+
+    def body(h, carry):
+        acc, cur = carry
+        src = (idx - h) % n
+        xs = jax.lax.dynamic_slice_in_dim(x, src * d_shard, d_shard, axis=-1)
+        nxt = jax.lax.ppermute(cur, axis_name, perm)   # in flight ...
+        acc = acc + xs @ cur                            # ... while we matmul
+        return acc, nxt
+
+    acc = jnp.zeros(x.shape[:-1] + (w.shape[-1],),
+                    jnp.promote_types(x.dtype, w.dtype))
+    acc, _ = jax.lax.fori_loop(0, n, body, (acc, w))
+    return acc

@@ -1,0 +1,107 @@
+"""Elastic scaling & straggler mitigation (1000+-node posture).
+
+Checkpoints are mesh-agnostic (checkpoint/store.py saves gathered arrays),
+so elastic re-scale = restore the same tree under a different mesh's
+shardings.  This module provides the bookkeeping around that:
+
+  * plan_rescale        — map an old mesh shape to a new one, validating
+                          that the global batch stays divisible;
+  * reshard_like        — place a restored host tree onto a new mesh;
+  * StragglerPolicy     — the data-skip contract: workers that fall behind
+                          a barrier deadline skip forward to the fleet's
+                          step (the (seed, step)-addressed pipeline makes
+                          that a cursor bump, not a data-shuffle);
+  * health / heartbeat scaffolding used by the launcher.
+
+Vortex framing: a pod is a warp — the fleet scheduler keeps an
+active/stalled(straggler)/barrier(checkpoint-sync) mask over pods and
+reschedules work exactly like the 4-mask warp scheduler (§IV-B).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    global_batch: int
+
+    @property
+    def dp_old(self) -> int:
+        return int(np.prod(self.old_shape[:-1]))
+
+    @property
+    def dp_new(self) -> int:
+        return int(np.prod(self.new_shape[:-1]))
+
+    def validate(self) -> None:
+        if self.global_batch % self.dp_new:
+            raise ValueError(
+                f"global batch {self.global_batch} not divisible by new DP "
+                f"width {self.dp_new}; adjust batch or pods")
+
+
+def plan_rescale(old_mesh, new_mesh, global_batch: int) -> RescalePlan:
+    plan = RescalePlan(tuple(old_mesh.shape.values()),
+                       tuple(new_mesh.shape.values()), global_batch)
+    plan.validate()
+    return plan
+
+
+def reshard_like(host_tree: Any, spec_tree: Any, mesh, rules=None) -> Any:
+    """Place a (restored, host-resident) tree onto `mesh` per its logical
+    spec tree — the second half of an elastic rescale."""
+    rules = rules or shd.train_rules(mesh)
+    shardings = shd.tree_shardings_checked(spec_tree, host_tree, mesh, rules)
+    return jax.tree.map(jax.device_put, host_tree, shardings)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-based straggler mitigation for the synchronous step.
+
+    A worker that misses `deadline_s` for a step barrier marks itself
+    stalled, skips its contribution (the fleet reduces over a masked mean),
+    and fast-forwards its data cursor to the fleet step on rejoin."""
+    deadline_s: float = 30.0
+    max_consecutive_skips: int = 5
+
+    def should_skip(self, barrier_wait_s: float, consecutive: int) -> bool:
+        return (barrier_wait_s > self.deadline_s
+                and consecutive < self.max_consecutive_skips)
+
+    def rejoin_cursor(self, fleet_step: int) -> int:
+        """(seed, step) addressing => rejoining is a cursor assignment."""
+        return fleet_step
+
+
+@dataclasses.dataclass
+class PodMasks:
+    """The fleet-level 4-mask scheduler state (pods as warps)."""
+    n_pods: int
+
+    def __post_init__(self):
+        self.active = np.ones(self.n_pods, bool)
+        self.stalled = np.zeros(self.n_pods, bool)
+        self.barrier = np.zeros(self.n_pods, bool)
+
+    def healthy(self) -> np.ndarray:
+        return self.active & ~self.stalled & ~self.barrier
+
+    def mark_straggler(self, pod: int) -> None:
+        self.stalled[pod] = True
+
+    def rejoin(self, pod: int) -> None:
+        self.stalled[pod] = False
+
+    def fail(self, pod: int) -> None:
+        self.active[pod] = False

@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules (MaxText-style) for the Vortex-JAX framework.
+
+Model code annotates tensors with *logical* axis names; this module maps
+them onto physical mesh axes.  The same model code therefore runs unsharded
+on CPU (tests), on a single pod (16x16 data x model), and multi-pod
+(2 x 16 x 16 pod x data x model) — only the rule set changes.
+
+Parallelism layout (see DESIGN.md §5):
+  - batch        -> (pod, data)     pure DP across pods (HSDP), DP within pod
+  - embed        -> data            FSDP: weights' d_model dim sharded in-pod
+  - mlp/qkv/...  -> model           tensor parallelism
+  - vocab        -> model           vocab-sharded embedding + logits
+  - experts      -> model           expert parallelism (EP == TP axis)
+  - expert_cap   -> data            MoE dispatch buffers' capacity dim
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None]
+Rules = Dict[str, Any]
+
+_state = threading.local()
+
+
+def _ctx():
+    return getattr(_state, "ctx", None)
+
+
+def current_context():
+    """(mesh, rules) active via axis_rules, or None (single-device)."""
+    return _ctx()
+
+
+def train_rules(mesh: Mesh) -> Rules:
+    axes = mesh.axis_names
+    has_pod = "pod" in axes
+    return {
+        "batch": ("pod", "data") if has_pod else ("data",),
+        "seq": None,
+        "embed": "data",        # FSDP (within pod)
+        "mlp": "model",
+        "qkv": "model",
+        "heads": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_cap": "data",
+        "ssm_inner": "model",
+        "act_embed": None,      # activations' d_model dim
+        "kv_seq": "model",      # KV-cache sequence dim (context-parallel decode)
+        "kv_heads": "model",    # flash-attention block layout (head-parallel)
+        "state_heads": "model",  # SSM state heads dim
+    }
+
+
+def serve_rules(mesh: Mesh, *, shard_batch: bool = True) -> Rules:
+    r = train_rules(mesh)
+    if not shard_batch:              # long_500k: global_batch == 1
+        r["batch"] = None
+    return r
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[Rules] = None):
+    """Activate (mesh, rules) for `constrain` / `logical_sharding` lookups.
+
+    With mesh=None every constraint becomes a no-op — that is how smoke
+    tests run the exact same model code on one CPU device.
+    """
+    prev = _ctx()
+    _state.ctx = None if mesh is None else (mesh, rules or train_rules(mesh))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def logical_to_spec(logical: Sequence[Logical], rules: Rules) -> P:
+    parts = []
+    for name in logical:
+        if name is None:
+            parts.append(None)
+        else:
+            parts.append(rules.get(name))
+    return P(*parts)
+
+
+def constrain(x: jax.Array, logical: Sequence[Logical]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(logical, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Rules):
+    """Map a tree of logical-axis tuples to a tree of NamedShardings."""
+    def one(logical):
+        if logical is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, logical_to_spec(logical, rules))
+    # NB: `type(x) is tuple` (not isinstance) — NamedTuple containers like
+    # OptState must be traversed, not treated as spec leaves.
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: x is None or type(x) is tuple)
+
+
+def tree_shardings_checked(spec_tree, struct_tree, mesh: Mesh, rules: Rules):
+    """Like tree_shardings, but drops any axis assignment whose dimension
+    is not divisible by the mesh axis size (out_shardings reject padding —
+    e.g. whisper's 1500-frame cross-KV on a 16-way model axis)."""
+    def one(logical, struct):
+        if logical is None:
+            return NamedSharding(mesh, P())
+        parts = []
+        for dim, name in zip(struct.shape, logical):
+            axis = rules.get(name) if name is not None else None
+            if axis is not None:
+                size = 1
+                for a in (axis if isinstance(axis, tuple) else (axis,)):
+                    size *= mesh.shape[a]
+                if dim % size != 0:
+                    axis = None
+            parts.append(axis)
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, spec_tree, struct_tree,
+                        is_leaf=lambda x: x is None or type(x) is tuple)
+
+
+def mesh_tp_degree(mesh: Optional[Mesh]) -> int:
+    if mesh is None:
+        return 1
+    return mesh.shape.get("model", 1)

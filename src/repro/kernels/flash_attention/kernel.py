@@ -1,0 +1,117 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+Grid (B, H, nq, nk) — the TPU executes the trailing grid axis sequentially
+per core, so fp32 scratch (m, l, acc) carries across the kv-block loop
+(FlashAttention-2 online softmax).  Block shapes are MXU-aligned
+(bq x d, bk x d with d = head_dim <= 128); GQA maps query head h to kv
+head h // G in the k/v index maps.
+
+SIMT adaptation (DESIGN.md Layer D): the causal/sliding-window mask is the
+thread-mask register — lanes outside the window are predicated off with
+-inf scores; fully-masked kv blocks skip their compute under pl.when (the
+"split is a nop when all lanes agree" shortcut; the block DMA itself is
+issued by the BlockSpec pipeline either way, which is the documented
+difference from a fully dynamic skip).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                bq: int, bk: int, nk: int, causal: bool,
+                window: Optional[int], scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # block-level relevance: any (t, j) pair with t >= j (causal) and
+    # t - j < window?
+    relevant = True
+    if causal:
+        relevant = (q_start + bq - 1) >= k_start
+    if window is not None:
+        relevant = jnp.logical_and(
+            relevant, (q_start - (k_start + bk - 1)) < window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal or window is not None:
+            rel = (q_start - k_start) + (
+                jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+                - jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1))
+            mask = jnp.ones((bq, bk), jnp.bool_)
+            if causal:
+                mask &= rel >= 0
+            if window is not None:
+                mask &= rel < window
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + p.sum(axis=1)
+        acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: [B,H,S,D]; k,v: [B,KV,Sk,D] -> o [B,H,S,D]."""
+    B, H, S, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(bq, S)
+    bk = min(bk, Sk)
+    assert S % bq == 0 and Sk % bk == 0, (S, bq, Sk, bk)
+    nq, nk = S // bq, Sk // bk
+    scale = 1.0 / (D ** 0.5)
+
+    kern = functools.partial(_fwd_kernel, bq=bq, bk=bk, nk=nk,
+                             causal=causal, window=window, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running denom l
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

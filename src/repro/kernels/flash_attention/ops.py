@@ -1,0 +1,32 @@
+"""Jitted wrapper for the flash-attention Pallas kernel.
+
+On CPU (this container) the kernel body executes in interpret mode; on TPU
+it compiles to Mosaic.  Layout contract: the model keeps [B,S,H,D]; the
+kernel wants [B,H,S,D] (head-major blocks) — transposes live here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128) -> jax.Array:
+    """q: [B,S,H,D]; k,v: [B,Sk,KV,D] -> [B,S,H,D]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                            bq=bq, bk=bk, interpret=not _on_tpu())
+    return o.transpose(0, 2, 1, 3)

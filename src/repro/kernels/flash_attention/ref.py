@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive full-matrix)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: [B,H,S,D]; k,v: [B,KV,Sk,D] -> [B,H,S,D].  fp32 softmax."""
+    B, H, S, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) / (D ** 0.5)
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((S, Sk), bool)
+    if causal:
+        mask &= pos_q >= pos_k
+    if window is not None:
+        mask &= (pos_q - pos_k) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    return o.reshape(B, H, S, D).astype(q.dtype)

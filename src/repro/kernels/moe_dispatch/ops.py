@@ -1,0 +1,17 @@
+"""Jitted wrapper for the MoE gather kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_dispatch.kernel import moe_gather_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("E", "C"))
+def moe_gather(x, slot_token, *, E: int, C: int):
+    return moe_gather_fwd(x, slot_token, E, C, interpret=not _on_tpu())

@@ -1,0 +1,14 @@
+"""Oracle for the MoE gather kernel: jnp take with validity mask."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moe_gather_ref(x, slot_token, E: int, C: int):
+    """x: [T, d]; slot_token: [E*C] -> [E, C, d] (invalid slots -> 0)."""
+    T, d = x.shape
+    valid = (slot_token >= 0) & (slot_token < T)
+    rows = jnp.where(valid, slot_token, 0)
+    buf = jnp.take(x, rows, axis=0)
+    buf = jnp.where(valid[:, None], buf, 0)
+    return buf.reshape(E, C, d)

@@ -1,0 +1,21 @@
+"""Jitted RMSNorm wrapper: rank-polymorphic over leading dims."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, scale, *, eps: float = 1e-5):
+    shp = x.shape
+    y = rmsnorm_fwd(x.reshape(-1, shp[-1]), scale, eps=eps,
+                    interpret=not _on_tpu())
+    return y.reshape(shp)

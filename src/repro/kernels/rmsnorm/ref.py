@@ -1,0 +1,10 @@
+"""Oracle: the model-path RMSNorm (fp32 statistics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import rmsnorm
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    return rmsnorm(x, scale, eps)

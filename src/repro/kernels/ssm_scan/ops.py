@@ -1,0 +1,15 @@
+"""Jitted wrapper for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssd_intra_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@jax.jit
+def ssd_intra(cum, xdt, Bc, Cc):
+    return ssd_intra_fwd(cum, xdt, Bc, Cc, interpret=not _on_tpu())

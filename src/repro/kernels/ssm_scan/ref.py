@@ -1,0 +1,20 @@
+"""Oracle for the SSD intra-chunk kernel: direct jnp of the same math."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_ref(cum, xdt, Bc, Cc):
+    """cum: [B,nc,Q,H]; xdt: [B,nc,Q,H,P]; Bc/Cc: [B,nc,Q,N] ->
+    (y_intra [B,nc,Q,H,P], S_chunk [B,nc,H,N,P]) fp32."""
+    Q = cum.shape[2]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    CB = jnp.einsum("bnqs,bnks->bnqk", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], CB[..., None] * decay, 0.0)
+    y = jnp.einsum("bnqkh,bnkhp->bnqhp", M, xdt.astype(jnp.float32))
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    S = jnp.einsum("bnkh,bnks,bnkhp->bnhsp", dec_end,
+                   Bc.astype(jnp.float32), xdt.astype(jnp.float32))
+    return y, S

@@ -1,0 +1,218 @@
+"""Cell builders: one (architecture x input-shape x mesh) dry-run/benchmark
+cell = a step function + abstract args + shardings.
+
+  train cells   -> train_step(state, batch)          (grad-accum AdamW)
+  prefill cells -> prefill_step(params, batch)       (builds the KV caches)
+  decode cells  -> serve_step(params, caches, token) (one new token)
+
+Everything here is allocation-free: args are ShapeDtypeStructs; the caller
+lowers with `jax.jit(...).lower(*args)`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES_BY_NAME, ModelConfig, ShapeConfig,
+                           TrainConfig, get_config)
+from repro.distributed import sharding as shd
+from repro.models import api
+from repro.training import loop as train_loop
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    rules: Dict[str, Any]
+    fn: Callable
+    args: Tuple[Any, ...]            # ShapeDtypeStruct trees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    static_desc: str = ""
+
+    def lower(self):
+        with self.mesh, shd.axis_rules(self.mesh, self.rules):
+            return jax.jit(self.fn,
+                           in_shardings=self.in_shardings,
+                           out_shardings=self.out_shardings,
+                           donate_argnums=self.donate_argnums,
+                           ).lower(*self.args)
+
+
+def _batch_shardings(batch_struct, mesh: Mesh, rules):
+    batch_axes = rules.get("batch")
+    def one(s):
+        spec = (batch_axes,) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, batch_struct)
+
+
+def default_train_config(cfg: ModelConfig, shape: ShapeConfig,
+                         **overrides) -> TrainConfig:
+    """Baseline knobs: full remat + grad accumulation with microbatch 32 —
+    the largest microbatch at which most archs' train_4k cells fit the
+    16 GB/chip budget (per-arch overrides below; sweep in EXPERIMENTS.md
+    §Perf)."""
+    kw: Dict[str, Any] = dict(microbatch=min(32, shape.global_batch),
+                              remat="full")
+    kw.update(overrides)
+    return TrainConfig(**kw)
+
+
+# Per-arch knobs needed to fit 16 GB/chip (values are implementation
+# parameters, not architecture changes; documented in EXPERIMENTS.md):
+#   microbatch — grad-accum microbatch size
+#   act_shard  — shard the residual stream's d_model over the model axis
+#                (Megatron-SP style; internvl's 8192-wide residuals)
+#   ssm_chunk  — SSD chunk length (zamba2's intra-chunk temporaries scale
+#                linearly with it)
+ARCH_TRAIN_OVERRIDES: Dict[str, Dict[str, Any]] = {
+    # post-hillclimb defaults (EXPERIMENTS.md §Perf records the search):
+    "qwen2.5-32b": {"microbatch": 16},
+    "internvl2-76b": {"microbatch": 32, "act_shard": True},
+    "zamba2-7b": {"ssm_chunk": 64, "microbatch": 16, "act_shard": True},
+    "olmoe-1b-7b": {"microbatch": 256, "seq_shard": True},
+    "deepseek-moe-16b": {"microbatch": 128, "seq_shard": True},
+}
+
+
+def build_train_cell(arch: str, shape_name: str, mesh: Mesh,
+                     tc: Optional[TrainConfig] = None,
+                     rules: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    over = dict(ARCH_TRAIN_OVERRIDES.get(arch, {}))
+    act_shard = over.pop("act_shard", False)
+    seq_shard = over.pop("seq_shard", False)
+    ssm_chunk = over.pop("ssm_chunk", None)
+    moe_dispatch = over.pop("moe_dispatch", None)
+    if ssm_chunk and cfg.ssm.d_state:
+        import dataclasses as _dc
+        cfg = cfg.replace(ssm=_dc.replace(cfg.ssm, chunk=ssm_chunk))
+    tc = tc or default_train_config(cfg, shape, **over)
+    if rules is None:
+        rules = shd.train_rules(mesh)
+        if act_shard:
+            rules["act_embed"] = "model"
+        if seq_shard:
+            rules["seq"] = "model"
+            rules["act_embed"] = None
+        if moe_dispatch:
+            rules["moe_dispatch"] = moe_dispatch
+    tp = shd.mesh_tp_degree(mesh)
+
+    state_struct = jax.eval_shape(
+        lambda k: train_loop.init_train_state(k, cfg, tc, tp=tp),
+        jax.random.PRNGKey(0))
+    batch_struct = api.input_specs(cfg, shape)
+
+    state_specs = train_loop.train_state_specs(cfg, tc)
+    state_shardings = shd.tree_shardings_checked(state_specs, state_struct,
+                                                 mesh, rules)
+    batch_shardings = _batch_shardings(batch_struct, mesh, rules)
+
+    step = train_loop.make_train_step(cfg, tc, tp=tp)
+
+    return Cell(
+        arch=arch, cfg=cfg, shape=shape, mesh=mesh, rules=rules,
+        fn=step, args=(state_struct, batch_struct),
+        in_shardings=(state_shardings, batch_shardings),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+        static_desc=f"train mb={tc.microbatch} remat={tc.remat}")
+
+
+def build_prefill_cell(arch: str, shape_name: str, mesh: Mesh,
+                       rules: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    rules = rules or shd.serve_rules(mesh, shard_batch=shape.global_batch > 1)
+    tp = shd.mesh_tp_degree(mesh)
+
+    def prefill_step(params, batch):
+        logits, _aux, caches = api.forward(params, batch, cfg, tp=tp,
+                                           mode="prefill", remat="none")
+        return logits[:, -1, :], caches
+
+    params_struct = jax.eval_shape(
+        lambda k: api.build_params(k, cfg, tp=tp), jax.random.PRNGKey(0))
+    batch_struct = api.input_specs(cfg, shape)
+    pshard = shd.tree_shardings_checked(api.param_specs(cfg), params_struct,
+                                        mesh, rules)
+    cache_shard = shd.tree_shardings_checked(
+        api.cache_logical_axes(cfg, shape, tp=tp),
+        jax.eval_shape(prefill_step, params_struct, batch_struct)[1],
+        mesh, rules)
+
+    return Cell(
+        arch=arch, cfg=cfg, shape=shape, mesh=mesh, rules=rules,
+        fn=prefill_step,
+        args=(params_struct, batch_struct),
+        in_shardings=(pshard, _batch_shardings(batch_struct, mesh, rules)),
+        out_shardings=(None, cache_shard),
+        donate_argnums=(),
+        static_desc="prefill")
+
+
+# int8 KV-cache quantization per arch for decode cells (post-hillclimb;
+# halves the dominant cache-read stream — EXPERIMENTS.md §Perf bonus)
+ARCH_SERVE_OVERRIDES: Dict[str, Dict[str, Any]] = {}
+
+
+def build_decode_cell(arch: str, shape_name: str, mesh: Mesh,
+                      rules: Optional[Dict[str, Any]] = None,
+                      kv_quant: Optional[bool] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    rules = rules or shd.serve_rules(mesh, shard_batch=shape.global_batch > 1)
+    tp = shd.mesh_tp_degree(mesh)
+    long_ctx = shape.name == "long_500k"
+    if kv_quant is None:
+        kv_quant = ARCH_SERVE_OVERRIDES.get(arch, {}).get("kv_quant", False)
+    kv_quant = kv_quant and cfg.family in ("dense", "moe", "vlm")
+
+    def serve_step(params, caches, tokens):
+        logits, _aux, new_caches = api.forward(
+            params, {"tokens": tokens}, cfg, tp=tp, mode="decode",
+            caches=caches, remat="none", long_context=long_ctx)
+        next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], new_caches
+
+    params_struct = jax.eval_shape(
+        lambda k: api.build_params(k, cfg, tp=tp), jax.random.PRNGKey(0))
+    caches_struct = api.cache_specs(cfg, shape, tp=tp, kv_quant=kv_quant)
+    tok_struct = api.input_specs(cfg, shape)["tokens"]
+
+    pshard = shd.tree_shardings_checked(api.param_specs(cfg), params_struct,
+                                        mesh, rules)
+    cache_shard = shd.tree_shardings_checked(
+        api.cache_logical_axes(cfg, shape, tp=tp, kv_quant=kv_quant),
+        caches_struct, mesh, rules)
+    tok_shard = _batch_shardings({"t": tok_struct}, mesh, rules)["t"]
+
+    return Cell(
+        arch=arch, cfg=cfg, shape=shape, mesh=mesh, rules=rules,
+        fn=serve_step,
+        args=(params_struct, caches_struct, tok_struct),
+        in_shardings=(pshard, cache_shard, tok_shard),
+        out_shardings=(None, cache_shard),
+        donate_argnums=(1,),
+        static_desc="decode" + (" long-context" if long_ctx else "")
+        + (" kv-int8" if kv_quant else ""))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, **kw) -> Cell:
+    kind = SHAPES_BY_NAME[shape_name].kind
+    if kind == "train":
+        return build_train_cell(arch, shape_name, mesh, **kw)
+    if kind == "prefill":
+        return build_prefill_cell(arch, shape_name, mesh, **kw)
+    return build_decode_cell(arch, shape_name, mesh, **kw)

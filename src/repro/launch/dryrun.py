@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+# on the production meshes, prove memory fits, and dump the roofline raw
+# artifacts (cost_analysis + collective bytes from the optimized HLO).
+#
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init) — which is why this module sets XLA_FLAGS at the very
+# top and why nothing else in the repo does.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b \
+#       --shape train_4k --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+#       --out experiments/dryrun
+import argparse     # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config  # noqa: E402
+from repro.launch import cells as cells_mod                        # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_chips     # noqa: E402
+from repro.models import api                                       # noqa: E402
+from repro.roofline import analysis                                # noqa: E402
+from repro.roofline.hw import V5E                                  # noqa: E402
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes", "host_temp_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = "experiments/dryrun",
+             keep_hlo: bool = False, cell_overrides=None) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = mesh_chips(mesh)
+    cfg = get_config(arch)
+    shape = [s for s in applicable_shapes(cfg) if s.name == shape_name]
+    if not shape:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped (inapplicable)"}
+    shape = shape[0]
+
+    t0 = time.time()
+    cell = cells_mod.build_cell(arch, shape_name, mesh,
+                                **(cell_overrides or {}))
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = dict(compiled.cost_analysis() or {})
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "optimal_seconds",
+             "bytes accessed operand 0 {}", "bytes accessed output {}")}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    mem = _memory_analysis_dict(compiled)
+
+    roof = analysis.analyze(cost, hlo, n_chips=n_chips,
+                            model_flops=api.model_flops(cfg, shape))
+    per_dev_bytes = (mem.get("argument_size_in_bytes", 0)
+                     - mem.get("alias_size_in_bytes", 0)
+                     + mem.get("output_size_in_bytes", 0)
+                     + mem.get("temp_size_in_bytes", 0))
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": n_chips, "status": "ok", "desc": cell.static_desc,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_analysis": cost,
+        "memory_analysis": mem,
+        "per_device_bytes": int(per_dev_bytes),
+        "fits_16g": bool(per_dev_bytes <= V5E.hbm_bytes),
+        "roofline": {
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s, "dominant": roof.dominant,
+            "model_flops": roof.model_flops,
+            "hlo_flops_global": roof.hlo_flops_global,
+            "useful_fraction": roof.useful_fraction,
+            "mfu_bound": roof.mfu_bound,
+            "wire_bytes": roof.wire_bytes,
+            "op_bytes": roof.op_bytes, "op_counts": roof.op_counts,
+        },
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{mesh_kind}".replace("/", "_")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        if keep_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        targets = [(a, s.name) for a in ARCH_IDS
+                   for s in applicable_shapes(get_config(a))]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        targets = [(args.arch, args.shape)]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch, shape_name in targets:
+            tag = f"{arch}_{shape_name}_{mesh_kind}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"[skip] {tag}", flush=True)
+                        continue
+            try:
+                rec = run_cell(arch, shape_name, mesh_kind, args.out,
+                               args.keep_hlo)
+            except Exception:
+                failures += 1
+                print(f"[FAIL] {tag}\n{traceback.format_exc()}", flush=True)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape_name,
+                                   "mesh": mesh_kind, "status": "error",
+                                   "error": traceback.format_exc()}, f)
+                continue
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(f"[ok]   {tag}  compile={rec['compile_s']}s  "
+                      f"dev_bytes={rec['per_device_bytes']/1e9:.2f}G "
+                      f"fits={rec['fits_16g']}  dom={r['dominant']}  "
+                      f"t=({r['compute_s']:.2e},{r['memory_s']:.2e},"
+                      f"{r['collective_s']:.2e})s", flush=True)
+            else:
+                print(f"[{rec['status']}] {tag}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

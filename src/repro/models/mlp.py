@@ -1,0 +1,25 @@
+"""Dense SwiGLU MLP block."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+from repro.models.common import dense_init, fold, swiglu
+
+
+def init_mlp(key, d: int, f: int, dtype) -> Dict[str, Any]:
+    return {
+        "w_gate": dense_init(fold(key, "w_gate"), (d, f), dtype, fan_in=d),
+        "w_up": dense_init(fold(key, "w_up"), (d, f), dtype, fan_in=d),
+        "w_down": dense_init(fold(key, "w_down"), (f, d), dtype, fan_in=f),
+    }
+
+
+def mlp_specs() -> Dict[str, Any]:
+    return {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+            "w_down": ("mlp", "embed")}
+
+
+def mlp_forward(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    return swiglu(x @ p["w_gate"], x @ p["w_up"]) @ p["w_down"]

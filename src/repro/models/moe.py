@@ -1,0 +1,133 @@
+"""Mixture-of-Experts block: top-k routing, capacity-based sort dispatch,
+shared experts, aux load-balancing loss.
+
+Vortex framing (DESIGN.md §2): expert routing *is* control divergence.
+Tokens disagree on which "path" (expert) to take; the dispatch below is the
+IPDOM-style serialization — each divergent path executes with its lane mask
+(the capacity buffer), then paths reconverge at the combine (the `join`).
+Shared experts are the uniform path: every lane agrees, so no dispatch
+machinery is needed — Vortex's "split acts like a nop".
+
+Baseline implementation is pjit-friendly sort-based dispatch with *global*
+capacity (argsort over (token, slot) pairs -> scatter into per-expert
+buffers -> grouped GEMM -> combine).  The shard_map all-to-all variant used
+by the perf pass lives in `repro.models.moe_a2a`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import dense_init, fold, swiglu
+from repro.models.mlp import init_mlp, mlp_forward, mlp_specs
+
+
+def moe_capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(num_tokens * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d, m = cfg.d_model, cfg.moe
+    p = {
+        "router": dense_init(fold(key, "router"), (d, m.num_experts),
+                             jnp.float32, fan_in=d),
+        "w_gate": dense_init(fold(key, "w_gate"), (m.num_experts, d, m.d_ff),
+                             dtype, fan_in=d),
+        "w_up": dense_init(fold(key, "w_up"), (m.num_experts, d, m.d_ff),
+                           dtype, fan_in=d),
+        "w_down": dense_init(fold(key, "w_down"), (m.num_experts, m.d_ff, d),
+                             dtype, fan_in=m.d_ff),
+    }
+    if m.num_shared:
+        # shared experts fused into one dense MLP of width num_shared * d_ff
+        p["shared"] = init_mlp(fold(key, "shared"), d, m.num_shared * m.d_ff, dtype)
+    return p
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s = {
+        "router": (None, None),     # replicated: d x E fp32 is tiny and the
+                                    # a2a dispatch needs it whole per shard
+        "w_gate": ("experts", "embed", None),
+        "w_up": ("experts", "embed", None),
+        "w_down": ("experts", None, "embed"),
+    }
+    if cfg.moe.num_shared:
+        s["shared"] = mlp_specs()
+    return s
+
+
+def moe_forward(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar fp32).
+
+    Dispatch selection: the expert-parallel all-to-all path (moe_a2a.py)
+    whenever a mesh is active and shapes permit; the pjit global-sort path
+    otherwise (CPU tests, decode's S=1) or when rules["moe_dispatch"] ==
+    "sort" (the baseline knob)."""
+    from repro.models import moe_a2a
+    if moe_a2a.a2a_applicable(x):
+        return moe_a2a.moe_forward_a2a(p, x, cfg)
+    B, S, d = x.shape
+    m = cfg.moe
+    T = B * S
+    k = m.top_k
+    E = m.num_experts
+    C = moe_capacity(T, cfg)
+
+    xf = x.reshape(T, d)
+    xf = constrain(xf, ("batch", None))
+
+    # --- routing (fp32) ---------------------------------------------------
+    logits = xf.astype(jnp.float32) @ p["router"]          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                  # [T, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style): E * sum_e f_e * P_e
+    P_e = probs.mean(axis=0)                               # [E]
+    f_e = jnp.zeros(E, jnp.float32).at[eidx.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(f_e * P_e) * m.router_aux_coef
+
+    # --- dispatch: sort (token, slot) pairs by expert ----------------------
+    flat_e = eidx.reshape(T * k)                           # [Tk]
+    sort_idx = jnp.argsort(flat_e)                         # stable
+    sorted_e = jnp.take(flat_e, sort_idx)
+    counts = jnp.zeros(E, jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k, dtype=jnp.int32) - jnp.take(starts, sorted_e)
+    keep = pos < C
+    dest = jnp.where(keep, sorted_e * C + pos, E * C)      # E*C = drop slot
+    token_of = sort_idx // k
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[dest].set(jnp.take(xf, token_of, axis=0), mode="drop")
+    buf = buf[: E * C].reshape(E, C, d)
+    buf = constrain(buf, ("experts", "expert_cap", None))
+
+    # --- grouped expert GEMMs (the divergent paths, lane-masked) -----------
+    h = swiglu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]),
+               jnp.einsum("ecd,edf->ecf", buf, p["w_up"]))
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out = constrain(out, ("experts", "expert_cap", None))
+
+    # --- combine (the `join`) ----------------------------------------------
+    out_flat = jnp.concatenate(
+        [out.reshape(E * C, d), jnp.zeros((1, d), x.dtype)], axis=0)
+    gathered = jnp.take(out_flat, dest, axis=0)            # [Tk, d] sorted order
+    sorted_gates = jnp.take(gates.reshape(T * k), sort_idx)
+    y = jnp.zeros((T, d), jnp.float32).at[token_of].add(
+        gathered.astype(jnp.float32) * sorted_gates[:, None])
+
+    # --- shared experts: the uniform path (split-is-a-nop) -----------------
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], xf).astype(jnp.float32)
+
+    y = constrain(y.astype(x.dtype), ("batch", None))
+    return y.reshape(B, S, d), aux

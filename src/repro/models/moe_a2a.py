@@ -1,0 +1,163 @@
+"""Expert-parallel MoE dispatch via shard_map + all-to-all.
+
+The baseline (models/moe.py) dispatches with a *global* sort under pjit;
+GSPMD then gathers the full [T*k, d] token buffer onto every device —
+observed 57-145 GB/device and a collective-dominated roofline on the MoE
+train/prefill cells.  This module is the production path:
+
+  * tokens stay sharded over (pod, data) x model — the sequence dim rides
+    the model axis during dispatch, so routing/sort work is fully local;
+  * a local capacity-C dispatch builds [E, C_loc, d] send buffers;
+  * one all-to-all over the model axis moves each expert's tokens to the
+    device that owns it (EP == TP axis), the expert GEMMs run on
+    [E/ep, C_loc*ep, d], and a second all-to-all returns the outputs;
+  * FSDP-sharded expert weights are all-gathered over `data` inside the
+    shard (the usual ZeRO-3 unshard, sized E/ep * d * ff per device).
+
+Vortex framing: routing is control divergence — the a2a is the IPDOM
+serialization that brings every divergent path (expert) its lanes, and the
+combine is the `join`.
+
+Falls back to the pjit sort path when there is no mesh (CPU tests), when
+S doesn't divide the model axis (decode), or when rules["moe_dispatch"]
+== "sort" (the baseline knob the perf log flips).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.models.mlp import mlp_forward
+
+
+def _round8(c: int) -> int:
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _dispatch_local(xf, logits, k: int, E: int, C: int):
+    """Local sort-based capacity dispatch.  xf: [T,d]; logits fp32 [T,E].
+    Returns (buf [E,C,d], dest [Tk], token_of [Tk], sorted_gates [Tk])."""
+    T, d = xf.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(T * k)
+    sort_idx = jnp.argsort(flat_e)
+    sorted_e = jnp.take(flat_e, sort_idx)
+    counts = jnp.zeros(E, jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k, dtype=jnp.int32) - jnp.take(starts, sorted_e)
+    keep = pos < C
+    dest = jnp.where(keep, sorted_e * C + pos, E * C)
+    token_of = sort_idx // k
+
+    buf = jnp.zeros((E * C + 1, d), xf.dtype)
+    buf = buf.at[dest].set(jnp.take(xf, token_of, axis=0), mode="drop")
+    buf = buf[: E * C].reshape(E, C, d)
+    sorted_gates = jnp.take(gates.reshape(T * k), sort_idx)
+    return buf, dest, token_of, sorted_gates, probs, eidx
+
+
+def _combine_local(out_buf, dest, token_of, sorted_gates, T: int, dtype):
+    E, C, d = out_buf.shape
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(E * C, d), jnp.zeros((1, d), out_buf.dtype)], axis=0)
+    gathered = jnp.take(out_flat, dest, axis=0)
+    y = jnp.zeros((T, d), jnp.float32).at[token_of].add(
+        gathered.astype(jnp.float32) * sorted_gates[:, None])
+    return y.astype(dtype)
+
+
+def a2a_applicable(x: jax.Array) -> bool:
+    ctx = shd.current_context()
+    if ctx is None:
+        return False
+    mesh, rules = ctx
+    if rules.get("moe_dispatch", "a2a") != "a2a":
+        return False
+    ep = mesh.shape.get("model", 1)
+    if ep <= 1 or x.shape[1] % ep != 0:
+        return False
+    batch_axes = rules.get("batch")
+    if batch_axes is not None:
+        sz = 1
+        for a in (batch_axes if isinstance(batch_axes, tuple)
+                  else (batch_axes,)):
+            sz *= mesh.shape[a]
+        if x.shape[0] % sz != 0:
+            return False
+    return True
+
+
+def moe_forward_a2a(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux).  Requires a2a_applicable(x)."""
+    mesh, rules = shd.current_context()
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    ep = mesh.shape["model"]
+    batch_axes = rules.get("batch")
+    B, S, d = x.shape
+    bsz = 1
+    if batch_axes is not None:
+        for a in (batch_axes if isinstance(batch_axes, tuple)
+                  else (batch_axes,)):
+            bsz *= mesh.shape[a]
+    T_loc = (B // bsz) * (S // ep)
+    C = _round8(int(T_loc * k / E * m.capacity_factor))
+
+    x_spec = P(batch_axes, "model", None)
+    wg_spec = P("model", "data", None)     # [E, d, ff] experts x FSDP
+    wd_spec = P("model", None, "data")     # [E, ff, d]
+
+    def shard_fn(xb, router, wg, wu, wd):
+        Bl, Sl, _ = xb.shape
+        xf = xb.reshape(Bl * Sl, d)
+        logits = xf.astype(jnp.float32) @ router
+        buf, dest, token_of, sgates, probs, eidx = _dispatch_local(
+            xf, logits, k, E, C)
+
+        # aux load-balance loss, global via psum over every mesh axis
+        # (token shards are disjoint across pod x data x model here)
+        axes = tuple(mesh.axis_names)
+        P_sum = jax.lax.psum(probs.sum(0), axes)
+        f_sum = jax.lax.psum(
+            jnp.zeros(E, jnp.float32).at[eidx.reshape(-1)].add(1.0), axes)
+        T_glob = jax.lax.psum(jnp.float32(xf.shape[0]), axes)
+        aux = E * jnp.sum((f_sum / (T_glob * k)) * (P_sum / T_glob)) \
+            * m.router_aux_coef
+
+        # ---- dispatch a2a: [E, C, d] -> [E/ep, C*ep, d] -----------------
+        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                                 tiled=True)
+        # ---- unshard FSDP expert weights (ZeRO-3 gather) ----------------
+        wg_f = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+        wu_f = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+        wd_f = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", buf, wg_f)
+        u = jnp.einsum("ecd,edf->ecf", buf, wu_f)
+        h = (jax.nn.silu(h.astype(jnp.float32)).astype(h.dtype)) * u
+        out = jnp.einsum("ecf,efd->ecd", h, wd_f)
+        # ---- return a2a: [E/ep, C*ep, d] -> [E, C, d] -------------------
+        out = jax.lax.all_to_all(out, "model", split_axis=1, concat_axis=0,
+                                 tiled=True)
+        y = _combine_local(out, dest, token_of, sgates, Bl * Sl, xb.dtype)
+        return y.reshape(Bl, Sl, d), aux
+
+    y, aux = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(x_spec, P(), wg_spec, wg_spec, wd_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], x.reshape(B * S, d)).reshape(
+            B, S, d)
+    return y, aux

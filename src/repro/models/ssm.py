@@ -1,0 +1,251 @@
+"""Mamba2 (SSD) mixer — chunked state-space duality form.
+
+The chunked algorithm is the TPU-native adaptation: intra-chunk work is
+matmul-shaped (MXU-friendly), inter-chunk work is a short scan over chunk
+states.  ``repro.kernels.ssm_scan`` implements the intra-chunk part as a
+Pallas kernel; this module is the model path and the oracle's building
+block.
+
+State layout: [B, H, N, P]  (heads, ssm state, head dim).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import dense_init, fold, ones_init, rmsnorm, zeros_init
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim P, state N)."""
+    di = cfg.ssm.expand * cfg.d_model
+    P = cfg.ssm.head_dim
+    H = di // P
+    N = cfg.ssm.d_state
+    return di, H, P, N
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    di, H, P, N = ssm_dims(cfg)
+    w = cfg.ssm.d_conv
+    p = {
+        "w_z": dense_init(fold(key, "w_z"), (d, di), dtype, fan_in=d),
+        "w_x": dense_init(fold(key, "w_x"), (d, di), dtype, fan_in=d),
+        "w_B": dense_init(fold(key, "w_B"), (d, N), dtype, fan_in=d),
+        "w_C": dense_init(fold(key, "w_C"), (d, N), dtype, fan_in=d),
+        "w_dt": dense_init(fold(key, "w_dt"), (d, H), dtype, fan_in=d),
+        "conv_x": (dense_init(fold(key, "conv_x"), (di, w), jnp.float32, fan_in=w)).astype(dtype),
+        "conv_B": (dense_init(fold(key, "conv_B"), (N, w), jnp.float32, fan_in=w)).astype(dtype),
+        "conv_C": (dense_init(fold(key, "conv_C"), (N, w), jnp.float32, fan_in=w)).astype(dtype),
+        # A in (-exp(A_log)): init A in [1, 2] -> stable decay
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": ones_init(None, (H,), jnp.float32),
+        "dt_bias": zeros_init(None, (H,), jnp.float32),
+        "norm": ones_init(None, (di,), dtype),
+        "w_out": dense_init(fold(key, "w_out"), (di, d), dtype, fan_in=di),
+    }
+    return p
+
+
+def mamba2_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "w_z": ("embed", "ssm_inner"), "w_x": ("embed", "ssm_inner"),
+        "w_B": ("embed", None), "w_C": ("embed", None),
+        "w_dt": ("embed", None),
+        "conv_x": ("ssm_inner", None), "conv_B": (None, None),
+        "conv_C": (None, None),
+        "A_log": (None,), "D": (None,), "dt_bias": (None,),
+        "norm": ("ssm_inner",),
+        "w_out": ("ssm_inner", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array,
+                state: Optional[jax.Array] = None):
+    """x: [B, L, C]; w: [C, W] depthwise.  Returns (y, new_state).
+
+    state: [B, W-1, C] trailing context for decode continuation."""
+    B, L, C = x.shape
+    W = w.shape[1]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros((B, L, C), jnp.float32)
+    for i in range(W):
+        y = y + xp[:, i:i + L, :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    new_state = xp[:, -(W - 1):, :] if W > 1 else xp[:, :0, :]
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD
+# ---------------------------------------------------------------------------
+
+def _ssd_head_group(cum, xdt, Bc, Cc, CB, tri, s0):
+    """SSD for one head group.  cum: [B,nc,Q,Hg]; xdt: [B,nc,Q,Hg,P];
+    Bc/Cc: [B,nc,Q,N]; CB: [B,nc,Q,Q]; s0: [B,Hg,N,P].
+    Returns (y [B,nc,Q,Hg,P], final_state [B,Hg,N,P])."""
+    # intra-chunk: y_intra[t] = sum_{j<=t} C_t.B_j exp(cum_t - cum_j) xdt_j
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,nc,Q,Q,Hg]
+    M = jnp.where(tri[None, None, :, :, None], CB[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bnqkh,bnkhp->bnqhp", M, xdt)
+
+    # chunk summaries: S_n = sum_j exp(cum_last - cum_j) B_j (x_j dt_j)
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)                   # [B,nc,Q,Hg]
+    S = jnp.einsum("bnkh,bnks,bnkhp->bnhsp", dec_end, Bc, xdt)   # [B,nc,Hg,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # [B,nc,Hg]
+
+    def step(state, inp):
+        S_n, dec_n = inp                                         # [B,Hg,N,P], [B,Hg]
+        new = state * dec_n[:, :, None, None] + S_n
+        return new, state                                        # emit state *entering* chunk
+
+    Ss = S.transpose(1, 0, 2, 3, 4)                              # [nc,B,Hg,N,P]
+    decs = chunk_decay.transpose(1, 0, 2)                        # [nc,B,Hg]
+    final_state, prev_states = jax.lax.scan(step, s0, (Ss, decs))
+
+    prev = prev_states.transpose(1, 0, 2, 3, 4)                  # [B,nc,Hg,N,P]
+    y_inter = jnp.einsum("bnqs,bnhsp,bnqh->bnqhp", Cc, prev, jnp.exp(cum))
+    return y_intra + y_inter, final_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                decay_budget: int = 32 * 1024 * 1024):
+    """Chunked state-space-duality scan.
+
+    x:  [B, L, H, P]   (conv'd, activated inputs)
+    dt: [B, L, H]      (softplus'd step sizes, fp32)
+    A:  [H]            (negative, fp32)
+    Bm,Cm: [B, L, N]   (single group, broadcast over heads)
+    Returns (y [B, L, H, P], final_state [B, H, N, P]).
+
+    Heads are processed in groups (lax.map) so the intra-chunk decay
+    tensor [B,nc,Q,Q,Hg] stays under `decay_budget` elements — without
+    this, 80-layer hybrid configs at train_4k materialize multi-GB
+    temporaries per layer.
+    """
+    Bsz, L, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    while L % Q:
+        Q -= 1
+    nc = L // Q
+
+    # pick a head-group size dividing H with the decay tensor in budget
+    hg = max(1, int(decay_budget // max(1, Bsz * nc * Q * Q)))
+    hg = min(hg, H)
+    while H % hg:
+        hg -= 1
+    ng = H // hg
+
+    a = (dt * A[None, None, :]).reshape(Bsz, nc, Q, H)           # log decay
+    cum = jnp.cumsum(a, axis=2)                                  # [B,nc,Q,H]
+    xdt = (x.astype(jnp.float32) * dt[..., None]).reshape(Bsz, nc, Q, H, Pd)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    CB = jnp.einsum("bnqs,bnks->bnqk", Cc, Bc)                   # [B,nc,Q,Q] shared
+
+    s0 = (jnp.zeros((Bsz, H, N, Pd), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    if ng == 1:
+        y, final_state = _ssd_head_group(cum, xdt, Bc, Cc, CB, tri, s0)
+    else:
+        cum_g = cum.reshape(Bsz, nc, Q, ng, hg).transpose(3, 0, 1, 2, 4)
+        xdt_g = xdt.reshape(Bsz, nc, Q, ng, hg, Pd).transpose(3, 0, 1, 2, 4, 5)
+        s0_g = s0.reshape(Bsz, ng, hg, N, Pd).transpose(1, 0, 2, 3, 4)
+        y_g, fin_g = jax.lax.map(
+            lambda args: _ssd_head_group(args[0], args[1], Bc, Cc, CB, tri, args[2]),
+            (cum_g, xdt_g, s0_g))
+        y = y_g.transpose(1, 2, 3, 0, 4, 5).reshape(Bsz, nc, Q, H, Pd)
+        final_state = fin_g.transpose(1, 0, 2, 3, 4).reshape(Bsz, H, N, Pd)
+
+    return y.reshape(Bsz, L, H, Pd), final_state
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm):
+    """One-token SSD update.  x: [B,1,H,P]; dt: [B,1,H]; Bm/Cm: [B,1,N].
+    state: [B,H,N,P] -> (y [B,1,H,P], new_state)."""
+    dtf = dt[:, 0].astype(jnp.float32)                           # [B,H]
+    dec = jnp.exp(dtf * A[None, :])                              # [B,H]
+    xdt = x[:, 0].astype(jnp.float32) * dtf[..., None]           # [B,H,P]
+    Bv = Bm[:, 0].astype(jnp.float32)                            # [B,N]
+    Cv = Cm[:, 0].astype(jnp.float32)
+    new_state = (state.astype(jnp.float32) * dec[:, :, None, None]
+                 + jnp.einsum("bs,bhp->bhsp", Bv, xdt))
+    y = jnp.einsum("bs,bhsp->bhp", Cv, new_state)
+    return y[:, None], new_state
+
+
+# ---------------------------------------------------------------------------
+# full mixer forward
+# ---------------------------------------------------------------------------
+
+def mamba2_forward(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, *,
+                   mode: str, cache: Optional[Dict[str, Any]] = None):
+    """x: [B, S, d] -> (y [B, S, d], new_cache).
+
+    cache (decode): {"ssm": [B,H,N,P], "conv_x": [B,W-1,di],
+                     "conv_B": [B,W-1,N], "conv_C": [B,W-1,N]}
+    """
+    B, S, d = x.shape
+    di, H, Pd, N = ssm_dims(cfg)
+
+    z = x @ p["w_z"]                                             # [B,S,di]
+    xi = x @ p["w_x"]
+    Bm = x @ p["w_B"]
+    Cm = x @ p["w_C"]
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])      # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                     # [H]
+
+    cs = cache or {}
+    xi, cx = causal_conv(xi, p["conv_x"], cs.get("conv_x"))
+    Bm, cB = causal_conv(Bm, p["conv_B"], cs.get("conv_B"))
+    Cm, cC = causal_conv(Cm, p["conv_C"], cs.get("conv_C"))
+
+    xh = xi.reshape(B, S, H, Pd)
+    if mode == "decode":
+        y, ssm_state = ssd_decode_step(cs["ssm"], xh, dt, A, Bm, Cm)
+    else:
+        y, ssm_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm.chunk,
+                                   init_state=cs.get("ssm"))
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = constrain(y, ("batch", None, "ssm_inner"))
+    out = y @ p["w_out"]
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"ssm": ssm_state, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    di, H, Pd, N = ssm_dims(cfg)
+    W = cfg.ssm.d_conv
+    return {
+        "ssm": jnp.zeros((batch, H, N, Pd), jnp.float32),
+        "conv_x": jnp.zeros((batch, W - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, N), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, N), dtype),
+    }

@@ -1,0 +1,196 @@
+"""Whisper-tiny encoder-decoder.  The conv/mel frontend is a STUB per the
+brief: `input_specs()` provides precomputed frame embeddings
+[B, encoder_ctx, d_model] (the output the conv downsampler would produce).
+
+Deviation from the HF checkpoint (documented): positions are sinusoidal on
+both sides (whisper's decoder uses a learned 448-entry table, which cannot
+express the assigned 32k decode shapes), and norms are RMS-style scale-only.
+Embeddings are tied (as in the paper).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention
+from repro.models.common import (embed_init, fold, ones_init, padded_vocab,
+                                 rmsnorm, sinusoidal_positions)
+from repro.models.mlp import init_mlp, mlp_forward, mlp_specs
+
+
+def _init_enc_layer(key, cfg, tp, dtype):
+    return {"norm1": ones_init(None, (cfg.d_model,), dtype),
+            "norm2": ones_init(None, (cfg.d_model,), dtype),
+            "attn": attention.init_attention(fold(key, "attn"), cfg, tp, dtype),
+            "mlp": init_mlp(fold(key, "mlp"), cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _init_dec_layer(key, cfg, tp, dtype):
+    p = _init_enc_layer(key, cfg, tp, dtype)
+    p["norm_x"] = ones_init(None, (cfg.d_model,), dtype)
+    p["xattn"] = attention.init_attention(fold(key, "xattn"), cfg, tp, dtype)
+    return p
+
+
+def _enc_layer_specs(cfg):
+    return {"norm1": ("embed",), "norm2": ("embed",),
+            "attn": attention.attention_specs(cfg), "mlp": mlp_specs()}
+
+
+def _dec_layer_specs(cfg):
+    s = _enc_layer_specs(cfg)
+    s["norm_x"] = ("embed",)
+    s["xattn"] = attention.attention_specs(cfg)
+    return s
+
+
+def init_whisper(key, cfg: ModelConfig, tp: int, dtype) -> Dict[str, Any]:
+    vp = padded_vocab(cfg.vocab_size)
+
+    def stack(key, n, fn):
+        return jax.vmap(fn)(jax.random.split(key, n))
+
+    return {
+        "embed": embed_init(fold(key, "embed"), (vp, cfg.d_model), dtype),
+        "enc": stack(fold(key, "enc"), cfg.encoder_layers,
+                     lambda k: _init_enc_layer(k, cfg, tp, dtype)),
+        "enc_norm": ones_init(None, (cfg.d_model,), dtype),
+        "dec": stack(fold(key, "dec"), cfg.num_layers,
+                     lambda k: _init_dec_layer(k, cfg, tp, dtype)),
+        "final_norm": ones_init(None, (cfg.d_model,), dtype),
+    }
+
+
+def whisper_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    def stacked(tree):
+        return jax.tree.map(lambda s: (None,) + tuple(s), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return {"embed": ("vocab", "embed"),
+            "enc": stacked(_enc_layer_specs(cfg)),
+            "enc_norm": ("embed",),
+            "dec": stacked(_dec_layer_specs(cfg)),
+            "final_norm": ("embed",)}
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, tp: int) -> jax.Array:
+    """frames: [B, Ctx, d] (stub frontend output) -> [B, Ctx, d]."""
+    B, Ctx, d = frames.shape
+    x = frames + sinusoidal_positions(Ctx, d).astype(frames.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(Ctx), (B, Ctx))
+
+    def step(x, lp):
+        h, _ = attention.attn_forward(
+            lp["attn"], rmsnorm(x, lp["norm1"], cfg.norm_eps), positions,
+            cfg=cfg, tp=tp, mode="train", bidirectional=True, use_rope=False)
+        x = x + h
+        x = x + mlp_forward(lp["mlp"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, params["enc"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out, cfg, tp):
+    """Precompute cross-attention K/V from encoder output."""
+    B, Ctx, _ = enc_out.shape
+    _, kvh, hd = attention.attn_dims(cfg, tp)
+    k = (enc_out @ lp["xattn"]["wk"]).reshape(B, Ctx, kvh, hd)
+    v = (enc_out @ lp["xattn"]["wv"]).reshape(B, Ctx, kvh, hd)
+    return k, v
+
+
+def whisper_forward(params: Dict[str, Any], batch: Dict[str, Any],
+                    cfg: ModelConfig, *, tp: int = 1, mode: str = "train",
+                    caches: Optional[Dict[str, Any]] = None,
+                    remat: str = "full"):
+    """batch: {"tokens": [B,S]} + ("frames": [B,Ctx,d] unless decoding with
+    cached cross-KV}.  Returns (logits, aux=0, new_caches).
+
+    caches: {"k","v" self-attn stacked [L,...], "xk","xv" cross stacked,
+             "len"}"""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    d = cfg.d_model
+
+    if mode == "decode":
+        lens = jnp.broadcast_to(caches["len"], (B,))
+        positions = lens.reshape(B, 1)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + _sinusoid_at(lens, d).astype(x.dtype)[:, None, :]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + sinusoidal_positions(S, d).astype(x.dtype)[None]
+    x = constrain(x, ("batch", None, "act_embed"))
+
+    if mode == "decode":
+        xk, xv = caches["xk"], caches["xv"]
+    else:
+        enc_out = encode(params, batch["frames"].astype(x.dtype), cfg, tp)
+        xk, xv = jax.vmap(
+            lambda lp: _cross_kv(lp, enc_out, cfg, tp))(params["dec"])
+
+    self_caches = None
+    if caches is not None and mode == "decode":
+        L = cfg.num_layers
+        ln = jnp.asarray(caches["len"])
+        self_caches = {"k": caches["k"], "v": caches["v"],
+                       "len": jnp.broadcast_to(ln, (L,) + ln.shape)}
+
+    def step(x, inp):
+        lp, kvx_k, kvx_v, sc = inp
+        h, new_sc = attention.attn_forward(
+            lp["attn"], rmsnorm(x, lp["norm1"], cfg.norm_eps), positions,
+            cfg=cfg, tp=tp, mode=mode, cache=sc, use_rope=False)
+        x = x + h
+        h, _ = attention.attn_forward(
+            lp["xattn"], rmsnorm(x, lp["norm_x"], cfg.norm_eps), positions,
+            cfg=cfg, tp=tp, mode=mode, kv_override=(kvx_k, kvx_v),
+            use_rope=False)
+        x = x + h
+        x = x + mlp_forward(lp["mlp"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+        return x, new_sc
+
+    if remat == "full" and mode == "train":
+        step = jax.checkpoint(step)
+    x, new_self = jax.lax.scan(step, x, (params["dec"], xk, xv, self_caches))
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T          # tied head
+    logits = constrain(logits, ("batch", None, "vocab"))
+
+    new_caches = None
+    if mode in ("prefill", "decode"):
+        prev_len = jnp.int32(0) if caches is None else caches["len"]
+        new_caches = {"k": new_self["k"], "v": new_self["v"],
+                      "xk": xk, "xv": xv,
+                      "len": prev_len + (jnp.int32(S) if mode == "prefill" else 1)}
+    return logits, jnp.float32(0.0), new_caches
+
+
+def _sinusoid_at(pos, dim: int) -> jax.Array:
+    """Sinusoidal position embedding at traced position(s).
+    pos: scalar -> [dim];  [B] -> [B, dim]."""
+    import math
+    log_timescale = math.log(10_000.0) / (dim // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(dim // 2, dtype=jnp.float32))
+    scaled = pos.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=-1)
+
+
+def init_whisper_caches(cfg: ModelConfig, batch: int, max_len: int, tp: int,
+                        dtype) -> Dict[str, Any]:
+    L = cfg.num_layers
+    _, kvh, hd = attention.attn_dims(cfg, tp)
+    one = attention.init_kv_cache(cfg, batch, max_len, tp, dtype)
+    return {
+        "k": jnp.broadcast_to(one["k"][None], (L,) + one["k"].shape),
+        "v": jnp.broadcast_to(one["v"][None], (L,) + one["v"].shape),
+        "xk": jnp.zeros((L, batch, cfg.encoder_ctx, kvh, hd), dtype),
+        "xv": jnp.zeros((L, batch, cfg.encoder_ctx, kvh, hd), dtype),
+        "len": jnp.int32(0),
+    }

@@ -1,0 +1,314 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, inherently sequential) with exponential gating and the paper's
+max-stabilizer.
+
+Both cells are implemented as exact sequential scans (the xLSTM
+stabilizer state m_t is a running max, which we keep exact rather than
+chunk-approximate).  Recurrent state is O(1) in sequence length, so the
+long_500k decode cell runs with constant memory — the reason this arch
+keeps that cell (DESIGN.md §Arch-applicability).
+
+Cache layout (per layer):
+  mLSTM: {"C": [B,H,P,P], "n": [B,H,P], "m": [B,H], "conv": [B,W-1,di]}
+  sLSTM: {"c": [B,H,Dh], "n": [B,H,Dh], "m": [B,H,Dh], "h": [B,H,Dh]}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, fold, ones_init, rmsnorm, zeros_init
+from repro.models.ssm import causal_conv
+
+CONV_W = 4
+
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = 2 * cfg.d_model
+    H = cfg.num_heads
+    P = di // H
+    return di, H, P
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    di, H, P = mlstm_dims(cfg)
+    return {
+        "w_x": dense_init(fold(key, "w_x"), (d, di), dtype, fan_in=d),
+        "w_z": dense_init(fold(key, "w_z"), (d, di), dtype, fan_in=d),
+        "conv": dense_init(fold(key, "conv"), (di, CONV_W), dtype, fan_in=CONV_W),
+        "wq": dense_init(fold(key, "wq"), (di, di), dtype, fan_in=di),
+        "wk": dense_init(fold(key, "wk"), (di, di), dtype, fan_in=di),
+        "wv": dense_init(fold(key, "wv"), (di, di), dtype, fan_in=di),
+        "w_i": dense_init(fold(key, "w_i"), (di, H), jnp.float32, fan_in=di),
+        "w_f": dense_init(fold(key, "w_f"), (di, H), jnp.float32, fan_in=di),
+        "b_i": zeros_init(None, (H,), jnp.float32),
+        # forget-gate bias init positive => long memory at init
+        "b_f": jnp.full((H,), 3.0, jnp.float32),
+        "norm": ones_init(None, (di,), dtype),
+        "w_out": dense_init(fold(key, "w_out"), (di, d), dtype, fan_in=di),
+    }
+
+
+def mlstm_specs() -> Dict[str, Any]:
+    return {"w_x": ("embed", "ssm_inner"), "w_z": ("embed", "ssm_inner"),
+            "conv": ("ssm_inner", None),
+            "wq": ("ssm_inner", None), "wk": ("ssm_inner", None),
+            "wv": ("ssm_inner", None),
+            "w_i": ("ssm_inner", None), "w_f": ("ssm_inner", None),
+            "b_i": (None,), "b_f": (None,),
+            "norm": ("ssm_inner",), "w_out": ("ssm_inner", "embed")}
+
+
+def _mlstm_cell(carry, inp):
+    """One timestep.  carry: (C [B,H,P,P], n [B,H,P], m [B,H]).
+    inp: (q,k,v [B,H,P], i_pre,f_pre [B,H])."""
+    C, n, m, = carry
+    q, k, v, i_pre, f_pre = inp
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    C_new = f_g[..., None, None] * C + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    num = jnp.einsum("bhp,bhpq->bhq", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)), 1.0)
+    h = num / den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, carry0, chunk: int = 64):
+    """Chunkwise-parallel mLSTM, EXACTLY equal to the sequential cell.
+
+    The naive scan saves per-step [B,H,P,P] outer products as autodiff
+    residuals — 40+ GB/device on the train_4k cell.  Chunking stores one
+    state per chunk instead; the stabilizer m_t (a max-plus recurrence,
+    m_t = max(m_{t-1}+logf_t, i_t)) is computed in parallel with an
+    associative scan so the chunked math reproduces the sequential
+    semantics including the max(|q.n|, 1) denominator.
+    """
+    B, S, H, P = q.shape
+    Q = chunk
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+    C0, n0, m0 = carry0
+
+    logf = jax.nn.log_sigmoid(f_pre)                    # [B,S,H]
+    # max-plus scan: elements (a,b) = (logf_t, i_t);
+    # (a1,b1)*(a2,b2) = (a1+a2, max(b1+a2, b2)); m_t = max(b_t, m0 + a_t)
+    def comb(x1, x2):
+        a1, b1 = x1
+        a2, b2 = x2
+        return a1 + a2, jnp.maximum(b1 + a2, b2)
+    a_cum, b_cum = jax.lax.associative_scan(comb, (logf, i_pre), axis=1)
+    m = jnp.maximum(b_cum, m0[:, None, :] + a_cum)      # [B,S,H]
+
+    # chunk views
+    def ch(t, extra=()):
+        return t.reshape((B, nc, Q) + t.shape[2:])
+    qc, kc, vc = ch(q), ch(k), ch(v)
+    ac, ic, mc = ch(a_cum), ch(i_pre), ch(m)
+    a_end = ac[:, :, -1]                                # [B,nc,H] (cumulative)
+    m_end = mc[:, :, -1]
+    # m entering each chunk (m0 for the first)
+    m_in = jnp.concatenate([m0[:, None, :], m_end[:, :-1]], axis=1)
+    a_in = jnp.concatenate([jnp.zeros_like(a_end[:, :1]), a_end[:, :-1]],
+                           axis=1)
+
+    # ---- inter-chunk state scan (per chunk, not per step) ---------------
+    # chunk summary relative to its own end:
+    #   S_c = sum_j exp(a_end - a_j + i_j - m_end) k_j v_j^T
+    w_sum = jnp.exp(a_end[:, :, None] - ac + ic - m_end[:, :, None])
+    S_c = jnp.einsum("bnqh,bnqhp,bnqhr->bnhpr", w_sum, kc, vc)
+    N_c = jnp.einsum("bnqh,bnqhp->bnhp", w_sum, kc)
+    # decay applied to the incoming state: exp(a_end - a_in + m_in - m_end)
+    dec = jnp.exp(a_end - a_in + m_in - m_end)          # [B,nc,H]
+
+    def state_step(carry, inp):
+        C_prev, n_prev = carry
+        S_i, N_i, d_i = inp
+        C_new = d_i[..., None, None] * C_prev + S_i
+        n_new = d_i[..., None] * n_prev + N_i
+        return (C_new, n_new), (C_prev, n_prev)         # emit entering state
+
+    (C_fin, n_fin), (C_in, n_in) = jax.lax.scan(
+        state_step, (C0, n0),
+        (S_c.transpose(1, 0, 2, 3, 4), N_c.transpose(1, 0, 2, 3),
+         dec.transpose(1, 0, 2)))
+    C_in = C_in.transpose(1, 0, 2, 3, 4)                # [B,nc,H,P,P]
+    n_in = n_in.transpose(1, 0, 2, 3)                   # [B,nc,H,P]
+
+    # ---- intra-chunk attention-like form ---------------------------------
+    # w_tj = exp(a_t - a_j + i_j - m_t), j <= t
+    wd = jnp.exp(ac[:, :, :, None, :] - ac[:, :, None, :, :]
+                 + ic[:, :, None, :, :] - mc[:, :, :, None, :])
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    wd = jnp.where(tri[None, None, :, :, None], wd, 0.0)
+    scores = jnp.einsum("bnqhp,bnjhp->bnqjh", qc, kc)
+    y_intra = jnp.einsum("bnqjh,bnqjh,bnjhp->bnqhp", scores, wd, vc)
+    n_intra = jnp.einsum("bnqjh,bnjhp->bnqhp", wd, kc)
+
+    # inter: exp(a_t - a_in + m_in - m_t) * (q_t . C_in)
+    dec_t = jnp.exp(ac - a_in[:, :, None] + m_in[:, :, None] - mc)
+    y_inter = jnp.einsum("bnqh,bnqhp,bnhpr->bnqhr", dec_t, qc, C_in)
+    n_inter = jnp.einsum("bnqh,bnqhp,bnhp->bnqh", dec_t, qc, n_in)
+
+    num = (y_intra + y_inter).reshape(B, S, H, P)
+    qn = (jnp.einsum("bnqjh,bnqhp,bnjhp->bnqh", wd, qc, kc)
+          + n_inter).reshape(B, S, H)
+    den = jnp.maximum(jnp.abs(qn), 1.0)
+    h = num / den[..., None]
+    return h, (C_fin, n_fin, m[:, -1])
+
+
+def mlstm_forward(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, *,
+                  mode: str, cache: Optional[Dict[str, Any]] = None,
+                  chunk: int = 64, use_chunked: bool = True):
+    B, S, d = x.shape
+    di, H, P = mlstm_dims(cfg)
+    xi = x @ p["w_x"]
+    z = x @ p["w_z"]
+    cs = cache or {}
+    xc, conv_state = causal_conv(xi, p["conv"], cs.get("conv"))
+
+    def heads(t):
+        return t.reshape(B, S, H, P).astype(jnp.float32)
+    q = heads(xc @ p["wq"])
+    k = heads(xc @ p["wk"]) / (P ** 0.5)
+    v = heads(xi @ p["wv"])
+    i_pre = (xc.astype(jnp.float32) @ p["w_i"]) + p["b_i"]      # [B,S,H]
+    f_pre = (xc.astype(jnp.float32) @ p["w_f"]) + p["b_f"]
+
+    if cache is not None and "C" in cs:
+        carry0 = (cs["C"], cs["n"], cs["m"])
+    else:
+        carry0 = (jnp.zeros((B, H, P, P), jnp.float32),
+                  jnp.zeros((B, H, P), jnp.float32),
+                  jnp.zeros((B, H), jnp.float32))
+
+    if use_chunked and S > 1:
+        h4, carry = _mlstm_chunked(q, k, v, i_pre, f_pre, carry0,
+                                   chunk=chunk)
+        h = h4.reshape(B, S, di).astype(x.dtype)
+    else:
+        xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+              v.transpose(1, 0, 2, 3),
+              i_pre.transpose(1, 0, 2), f_pre.transpose(1, 0, 2))
+        carry, hs = jax.lax.scan(_mlstm_cell, carry0, xs)       # [S,B,H,P]
+        h = hs.transpose(1, 0, 2, 3).reshape(B, S, di).astype(x.dtype)
+    h = rmsnorm(h, p["norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = h @ p["w_out"]
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        C, n, m = carry
+        new_cache = {"C": C, "n": n, "m": m, "conv": conv_state}
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    di, H, P = mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, H, P, P), jnp.float32),
+            "n": jnp.zeros((batch, H, P), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_W - 1, di), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = d // H
+    p = {"norm": ones_init(None, (d,), dtype),
+         "w_out": dense_init(fold(key, "w_out"), (d, d), dtype, fan_in=d)}
+    for g in ("i", "f", "z", "o"):
+        p[f"w_{g}"] = dense_init(fold(key, f"w_{g}"), (d, d), dtype, fan_in=d)
+        # block-diagonal recurrent weights: [H, Dh, Dh]
+        p[f"r_{g}"] = dense_init(fold(key, f"r_{g}"), (H, Dh, Dh),
+                                 jnp.float32, fan_in=Dh)
+        p[f"b_{g}"] = (jnp.full((d,), 1.0, jnp.float32) if g == "f"
+                       else zeros_init(None, (d,), jnp.float32))
+    return p
+
+
+def slstm_specs() -> Dict[str, Any]:
+    # w_out is d x d: shard the output dim on the model axis (the input dim
+    # already carries FSDP via "embed"->data; a dim may appear once only)
+    s = {"norm": ("embed",), "w_out": ("embed", "mlp")}
+    for g in ("i", "f", "z", "o"):
+        s[f"w_{g}"] = ("embed", None)
+        s[f"r_{g}"] = (None, None, None)
+        s[f"b_{g}"] = (None,)
+    return s
+
+
+def _slstm_cell(p, H, Dh):
+    def cell(carry, inp):
+        c, n, m, h = carry                   # each [B,H,Dh]
+        xi, xf, xz, xo = inp                 # pre-activations [B,H,Dh]
+
+        def rec(g, hprev):
+            return jnp.einsum("bhd,hde->bhe", hprev, p[f"r_{g}"])
+        it = xi + rec("i", h)
+        ft = xf + rec("f", h)
+        zt = jnp.tanh(xz + rec("z", h))
+        ot = jax.nn.sigmoid(xo + rec("o", h))
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c_new = f_g * c + i_g * zt
+        n_new = f_g * n + i_g
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+    return cell
+
+
+def slstm_forward(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, *,
+                  mode: str, cache: Optional[Dict[str, Any]] = None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    Dh = d // H
+
+    def pre(g):
+        y = (x @ p[f"w_{g}"]).astype(jnp.float32) + p[f"b_{g}"]
+        return y.reshape(B, S, H, Dh).transpose(1, 0, 2, 3)      # [S,B,H,Dh]
+    xs = (pre("i"), pre("f"), pre("z"), pre("o"))
+
+    cs = cache or {}
+    if "c" in cs:
+        carry0 = (cs["c"], cs["n"], cs["m"], cs["h"])
+    else:
+        zero = jnp.zeros((B, H, Dh), jnp.float32)
+        carry0 = (zero, zero, zero - 1e30, zero)
+
+    carry, hs = jax.lax.scan(_slstm_cell(p, H, Dh), carry0, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    h = rmsnorm(h, p["norm"], cfg.norm_eps)
+    out = h @ p["w_out"]
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        c, n, m, hh = carry
+        new_cache = {"c": c, "n": n, "m": m, "h": hh}
+    return out, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    H = cfg.num_heads
+    Dh = cfg.d_model // H
+    zero = jnp.zeros((batch, H, Dh), jnp.float32)
+    return {"c": zero, "n": zero, "m": zero - 1e30, "h": zero}

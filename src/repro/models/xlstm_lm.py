@@ -1,0 +1,94 @@
+"""xLSTM language model assembly: embed -> pattern-cycled {mLSTM, sLSTM}
+blocks -> tied head.
+
+The block pattern ('m'*7 + 's' for xlstm-125m) is cycled over layers; layers
+are a short python loop (12 blocks) rather than a scan because the stack is
+heterogeneous and shallow.  Recurrent state is O(1) in sequence length so
+all decode shapes (incl. long_500k) run with constant memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import xlstm
+from repro.models.common import embed_init, fold, ones_init, padded_vocab, rmsnorm
+
+
+def layer_kinds(cfg: ModelConfig) -> List[str]:
+    pat = cfg.xlstm_pattern or ("m",)
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def init_xlstm_lm(key, cfg: ModelConfig, tp: int, dtype) -> Dict[str, Any]:
+    del tp
+    vp = padded_vocab(cfg.vocab_size)
+    params: Dict[str, Any] = {
+        "embed": embed_init(fold(key, "embed"), (vp, cfg.d_model), dtype),
+        "final_norm": ones_init(None, (cfg.d_model,), dtype),
+    }
+    for i, kind in enumerate(layer_kinds(cfg)):
+        k = fold(key, f"layer{i}")
+        params[f"layer_{i:02d}"] = {
+            "norm": ones_init(None, (cfg.d_model,), dtype),
+            "cell": (xlstm.init_mlstm(k, cfg, dtype) if kind == "m"
+                     else xlstm.init_slstm(k, cfg, dtype)),
+        }
+    return params
+
+
+def xlstm_lm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"embed": ("vocab", "embed"), "final_norm": ("embed",)}
+    for i, kind in enumerate(layer_kinds(cfg)):
+        s[f"layer_{i:02d}"] = {
+            "norm": ("embed",),
+            "cell": xlstm.mlstm_specs() if kind == "m" else xlstm.slstm_specs(),
+        }
+    return s
+
+
+def xlstm_lm_forward(params: Dict[str, Any], batch: Dict[str, Any],
+                     cfg: ModelConfig, *, tp: int = 1, mode: str = "train",
+                     caches: Optional[Dict[str, Any]] = None,
+                     remat: str = "full"):
+    """Returns (logits, aux=0, new_caches).  caches: {"layer_XX": cell cache}."""
+    del tp
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, ("batch", None, "act_embed"))
+
+    new_caches: Dict[str, Any] = {}
+    for i, kind in enumerate(layer_kinds(cfg)):
+        name = f"layer_{i:02d}"
+        lp = params[name]
+        cache = None if caches is None else caches.get(name)
+        fwd = xlstm.mlstm_forward if kind == "m" else xlstm.slstm_forward
+
+        def block(x, lp, cache, fwd=fwd):
+            h, nc = fwd(lp["cell"], rmsnorm(x, lp["norm"], cfg.norm_eps),
+                        cfg, mode=mode, cache=cache)
+            return x + h, nc
+
+        if remat == "full" and mode == "train":
+            block = jax.checkpoint(block)
+        x, nc = block(x, lp, cache)
+        if mode in ("prefill", "decode"):
+            new_caches[name] = nc
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T                     # tied head
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, jnp.float32(0.0), (new_caches or None)
+
+
+def init_xlstm_caches(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    caches: Dict[str, Any] = {}
+    for i, kind in enumerate(layer_kinds(cfg)):
+        caches[f"layer_{i:02d}"] = (
+            xlstm.init_mlstm_cache(cfg, batch, dtype) if kind == "m"
+            else xlstm.init_slstm_cache(cfg, batch))
+    return caches

@@ -1,0 +1,209 @@
+"""Zamba2 hybrid: a Mamba2 backbone with ONE weight-shared attention block
+applied every `attn_every` Mamba blocks.
+
+81 Mamba blocks, attn_every=6  ->  13 groups of (6 mamba + shared attn)
+plus a 3-block Mamba tail.  The shared block has a single parameter set
+(weight sharing is zamba2's core trick) but 13 distinct KV caches — same
+weights, different activations.
+
+Vortex framing: the shared attention block is the *uniform path* every
+token takes (split-is-a-nop), and its periodic application is the `bar`
+synchronization point between groups of divergence-free SSM work.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention, ssm
+from repro.models.common import dense_init, embed_init, fold, ones_init, padded_vocab, rmsnorm
+from repro.models.mlp import init_mlp, mlp_forward, mlp_specs
+
+
+def _plan(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(groups, group_size, tail)."""
+    g = cfg.attn_every
+    n_groups = cfg.num_layers // g
+    tail = cfg.num_layers - n_groups * g
+    return n_groups, g, tail
+
+
+def _init_mamba_block(key, cfg, dtype):
+    return {"norm": ones_init(None, (cfg.d_model,), dtype),
+            "mixer": ssm.init_mamba2(fold(key, "mixer"), cfg, dtype)}
+
+
+def _mamba_block_specs(cfg):
+    return {"norm": ("embed",), "mixer": ssm.mamba2_specs(cfg)}
+
+
+def init_zamba(key, cfg: ModelConfig, tp: int, dtype) -> Dict[str, Any]:
+    n_groups, g, tail = _plan(cfg)
+    vp = padded_vocab(cfg.vocab_size)
+
+    def stack(key, n):
+        return jax.vmap(lambda k: _init_mamba_block(k, cfg, dtype))(
+            jax.random.split(key, n))
+
+    params = {
+        "embed": embed_init(fold(key, "embed"), (vp, cfg.d_model), dtype),
+        "blocks": stack(fold(key, "blocks"), n_groups * g),
+        "shared": {
+            "norm1": ones_init(None, (cfg.d_model,), dtype),
+            "norm2": ones_init(None, (cfg.d_model,), dtype),
+            "attn": attention.init_attention(fold(key, "shared_attn"), cfg, tp, dtype),
+            "mlp": init_mlp(fold(key, "shared_mlp"), cfg.d_model, cfg.d_ff, dtype),
+        },
+        "final_norm": ones_init(None, (cfg.d_model,), dtype),
+        "lm_head": dense_init(fold(key, "lm_head"), (cfg.d_model, vp), dtype,
+                              fan_in=cfg.d_model),
+    }
+    if tail:
+        params["tail"] = stack(fold(key, "tail"), tail)
+    return params
+
+
+def zamba_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    def stacked(tree):
+        return jax.tree.map(lambda s: (None,) + tuple(s), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    _n_groups, _g, tail = _plan(cfg)
+    s = {
+        "embed": ("vocab", "embed"),
+        "blocks": stacked(_mamba_block_specs(cfg)),
+        "shared": {"norm1": ("embed",), "norm2": ("embed",),
+                   "attn": attention.attention_specs(cfg),
+                   "mlp": mlp_specs()},
+        "final_norm": ("embed",),
+        "lm_head": ("embed", "vocab"),
+    }
+    if tail:
+        s["tail"] = stacked(_mamba_block_specs(cfg))
+    return s
+
+
+def _mamba_step(cfg, mode):
+    def step(carry, inp):
+        x = carry
+        bp, cache = inp
+        h, new_cache = ssm.mamba2_forward(
+            bp["mixer"], rmsnorm(x, bp["norm"], cfg.norm_eps), cfg,
+            mode=mode, cache=cache)
+        return x + h, new_cache
+    return step
+
+
+def _shared_block(sp, x, positions, cfg, tp, mode, kv_cache, window):
+    h, new_kv = attention.attn_forward(
+        sp["attn"], rmsnorm(x, sp["norm1"], cfg.norm_eps), positions,
+        cfg=cfg, tp=tp, mode=mode, cache=kv_cache, window=window)
+    x = x + h
+    x = x + mlp_forward(sp["mlp"], rmsnorm(x, sp["norm2"], cfg.norm_eps))
+    return x, new_kv
+
+
+def zamba_forward(params: Dict[str, Any], batch: Dict[str, Any],
+                  cfg: ModelConfig, *, tp: int = 1, mode: str = "train",
+                  caches: Optional[Dict[str, Any]] = None,
+                  remat: str = "full",
+                  window_override: Optional[int] = None):
+    """Returns (logits, aux=0, new_caches).
+
+    caches: {"mamba": stacked [G*g] tree, "tail": stacked [tail] tree,
+             "kv": stacked [G] kv tree, "len": int32}
+    window_override: sliding window for the shared attention (long_500k).
+    """
+    n_groups, g, tail = _plan(cfg)
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    S = x.shape[1]
+    if mode == "decode":
+        positions = jnp.broadcast_to(caches["len"], (B,)).reshape(B, 1)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = constrain(x, ("batch", None, "act_embed"))
+
+    # regroup stacked blocks: [G*g, ...] -> [G, g, ...]
+    def regroup(t):
+        return t.reshape((n_groups, g) + t.shape[1:])
+    blocks = jax.tree.map(regroup, params["blocks"])
+    mamba_caches = None
+    kv_caches = None
+    if caches is not None:
+        mamba_caches = jax.tree.map(regroup, caches["mamba"])
+        ln = jnp.asarray(caches["len"])
+        kv_caches = {"k": caches["kv"]["k"], "v": caches["kv"]["v"],
+                     "len": jnp.broadcast_to(ln, (n_groups,) + ln.shape)}
+
+    shared = params["shared"]
+
+    def group_fn(x, gp, gcache, kv):
+        x, new_mamba = jax.lax.scan(_mamba_step(cfg, mode), x, (gp, gcache))
+        x, new_kv = _shared_block(shared, x, positions, cfg, tp, mode, kv,
+                                  window_override)
+        return x, new_mamba, new_kv
+
+    if remat == "full" and mode == "train":
+        group_fn = jax.checkpoint(group_fn)
+    elif remat == "dots" and mode == "train":
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def outer(x, inp):
+        gp, gcache, kv = inp
+        x, new_mamba, new_kv = group_fn(x, gp, gcache, kv)
+        return x, (new_mamba, new_kv)
+
+    x, (new_mamba, new_kv) = jax.lax.scan(
+        outer, x, (blocks, mamba_caches, kv_caches))
+
+    new_tail = None
+    if tail:
+        tail_caches = None if caches is None else caches["tail"]
+        x, new_tail = jax.lax.scan(_mamba_step(cfg, mode), x,
+                                   (params["tail"], tail_caches))
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    logits = constrain(logits, ("batch", None, "vocab"))
+
+    new_caches = None
+    if mode in ("prefill", "decode"):
+        def degroup(t):
+            return t.reshape((n_groups * g,) + t.shape[2:])
+        prev_len = jnp.int32(0) if caches is None else caches["len"]
+        new_caches = {
+            "mamba": jax.tree.map(degroup, new_mamba),
+            "kv": {"k": new_kv["k"], "v": new_kv["v"]},
+            "len": prev_len + (jnp.int32(S) if mode == "prefill" else 1),
+        }
+        if tail:
+            new_caches["tail"] = new_tail
+    return logits, jnp.float32(0.0), new_caches
+
+
+def init_zamba_caches(cfg: ModelConfig, batch: int, max_len: int, tp: int,
+                      dtype, window: Optional[int] = None) -> Dict[str, Any]:
+    n_groups, g, tail = _plan(cfg)
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (n,) + t.shape), tree)
+
+    one_ssm = ssm.init_ssm_cache(cfg, batch, dtype)
+    one_kv = attention.init_kv_cache(cfg, batch, max_len, tp, dtype,
+                                     window=window)
+    caches = {
+        "mamba": stack(one_ssm, n_groups * g),
+        "kv": {"k": stack(one_kv["k"], n_groups),
+               "v": stack(one_kv["v"], n_groups)},
+        "len": jnp.int32(0),
+    }
+    if tail:
+        caches["tail"] = stack(one_ssm, tail)
+    return caches

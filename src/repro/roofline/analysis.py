@@ -1,0 +1,184 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+
+  compute    = per-device HLO FLOPs / peak_FLOP/s
+  memory     = per-device HLO bytes accessed / HBM bandwidth
+  collective = sum over collective ops of wire-bytes(op) / link bandwidth
+
+`cost_analysis()` on the compiled (post-SPMD) module reports *per-partition*
+flops/bytes, so no further division by chip count is needed (validated in
+tests/test_roofline.py against a hand-counted matmul).
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO and sum
+operand/result sizes per op with ring cost models over the op's group size n:
+
+  all-reduce         2 * s * (n-1)/n     (reduce-scatter + all-gather phases)
+  all-gather         r * (n-1)/n         (r = result bytes per device)
+  reduce-scatter     s * (n-1)/n
+  all-to-all         s * (n-1)/n
+  collective-permute s
+
+where s = per-device operand bytes (shapes in the partitioned module are
+already per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline.hw import Chip, DTYPE_BYTES, V5E
+
+_SHAPE_RE = re.compile(r"\(?([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every `dtype[a,b,c]` shape in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))           # [ngroups,group_size]<=[N]
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split("{")[-1]
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        if ids:
+            return len(ids)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0              # ring-model bytes through a link
+    op_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    op_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_text, op, _ = m.group(1), m.group(2), m.group(3)
+        n = _group_size(line, n_devices)
+        if n <= 1:
+            continue
+        # operand shapes: inline if printed, else resolved from the result
+        # shape (exact for all-reduce/permute; equal-size for the rest)
+        operands = line[m.end():]
+        s_bytes = _shape_bytes(operands.split(", channel_id")[0]
+                               .split(", replica_groups")[0])
+        r_bytes = _shape_bytes(result_text)
+        if s_bytes == 0:
+            s_bytes = r_bytes
+        if op == "all-reduce":
+            wire = 2.0 * s_bytes * (n - 1) / n
+        elif op == "all-gather":
+            wire = r_bytes * (n - 1) / n
+        elif op in ("reduce-scatter", "all-to-all"):
+            wire = s_bytes * (n - 1) / n
+        else:                            # collective-permute
+            wire = s_bytes
+        stats.wire_bytes += wire
+        stats.op_bytes[op] = stats.op_bytes.get(op, 0.0) + wire
+        stats.op_counts[op] = stats.op_counts.get(op, 0) + 1
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes: float
+    model_flops: float                   # 6 N D (global)
+    hlo_flops_global: float
+    op_bytes: Dict[str, float]
+    op_counts: Dict[str, int]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def total_s(self) -> float:
+        # lower bound: perfect overlap -> max; no overlap -> sum.  We report
+        # the max (roofline convention) and keep the parts visible.
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global): remat/redundancy waste."""
+        return self.model_flops / max(self.hlo_flops_global, 1.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        if self.total_s <= 0:
+            return 0.0
+        per_chip = self.model_flops / max(self.n_chips, 1)
+        return per_chip / self.total_s / self.chip.peak_bf16_flops
+
+    # set post-init
+    n_chips: int = 0
+    chip: Chip = V5E
+
+
+def analyze(cost: Dict[str, float], hlo_text: str, *, n_chips: int,
+            model_flops: float, chip: Chip = V5E,
+            trip_aware: bool = True) -> Roofline:
+    """Roofline terms.  `cost` is compiled.cost_analysis() (kept for
+    reference); when trip_aware (default) the three terms come from the
+    trip-count-corrected HLO walk in hlo_cost.py, because XLA's
+    HloCostAnalysis counts scan bodies once (~256x undercount for scanned
+    layer stacks — see hlo_cost.py docstring)."""
+    if trip_aware:
+        from repro.roofline import hlo_cost
+        tc = hlo_cost.analyze_hlo(hlo_text, n_chips)
+        flops, bytes_ = tc.flops, tc.bytes
+        wire, opb = tc.wire_bytes, tc.coll_op_bytes
+        opc = {k: int(v) for k, v in tc.coll_op_counts.items()}
+    else:
+        flops = float(cost.get("flops", 0.0) or 0.0)
+        bytes_ = float(cost.get("bytes accessed", 0.0) or 0.0)
+        coll = parse_collectives(hlo_text, n_chips)
+        wire, opb, opc = coll.wire_bytes, coll.op_bytes, coll.op_counts
+    r = Roofline(
+        compute_s=flops / chip.peak_bf16_flops,
+        memory_s=bytes_ / chip.hbm_bw,
+        collective_s=wire / chip.ici_link_bw,
+        flops_per_device=flops,
+        bytes_per_device=bytes_,
+        wire_bytes=wire,
+        model_flops=model_flops,
+        hlo_flops_global=flops * n_chips,
+        op_bytes=opb,
+        op_counts=opc,
+    )
+    r.n_chips = n_chips
+    r.chip = chip
+    return r

@@ -1,0 +1,23 @@
+"""Hardware constants for the roofline model (TPU v5e per the brief)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12      # FLOP/s per chip
+    hbm_bw: float = 819e9                # bytes/s per chip
+    ici_link_bw: float = 50e9            # bytes/s per link (brief's constant)
+    hbm_bytes: float = 16e9              # capacity, for fit checks
+
+
+V5E = Chip()
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}

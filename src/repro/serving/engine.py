@@ -1,0 +1,231 @@
+"""Serving engine: continuous batching over a slotted KV-cache pool.
+
+One jitted prefill function (per prompt bucket) + one jitted decode
+function over the whole pool; the RequestScheduler (the Vortex 4-mask
+warp scheduler over request slots) decides which slots advance each tick.
+Slots not selected keep their state — the decode runs the full pool with
+a lane mask, exactly how a thread mask predicates lanes.
+
+Ragged lengths: the cache pool's `len` is a per-slot [B] vector (see
+models/attention.py decode path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import RequestScheduler
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
+                 max_len: int = 512, prompt_bucket: int = 64,
+                 decode_width: Optional[int] = None,
+                 sampler: SamplerConfig = SamplerConfig(),
+                 eos_id: int = 1):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.bucket = prompt_bucket
+        self.decode_width = decode_width or n_slots
+        self.sampler = sampler
+        self.eos_id = eos_id
+        self.sched = RequestScheduler(n_slots)
+        self.requests: Dict[int, Request] = {}
+        self.pending: List[Request] = []
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(sampler.seed)
+
+        # pool caches: per-slot len vector
+        self.caches = api.init_caches(cfg, n_slots, max_len)
+        self.caches["len"] = jnp.zeros(n_slots, jnp.int32)
+        self.lens = np.zeros(n_slots, np.int32)
+        self.last_tok = np.zeros(n_slots, np.int32)
+        # structural slot-axis map: the axis whose size changes with the
+        # slot count (shape-matching heuristics collide when e.g.
+        # num_layers == n_slots)
+        s_a = jax.eval_shape(lambda: api.init_caches(cfg, n_slots, max_len))
+        s_b = jax.eval_shape(
+            lambda: api.init_caches(cfg, n_slots + 1, max_len))
+        def axis_of(a, b):
+            for ax, (da, db) in enumerate(zip(a.shape, b.shape)):
+                if da != db:
+                    return ax
+            return None
+        self._slot_ax = jax.tree.map(axis_of, s_a, s_b)
+
+        self._decode_fn = jax.jit(self._decode_step)
+        self._prefill_fn = jax.jit(self._prefill_one)
+
+    # ------------------------------------------------------------------ jit
+
+    def _prefill_one(self, params, tokens, true_len):
+        """tokens [1, bucket] (padded); returns (next_token [1], caches)."""
+        logits, _aux, caches = api.forward(params, {"tokens": tokens},
+                                           self.cfg, mode="prefill",
+                                           remat="none")
+        last = jnp.take_along_axis(
+            logits, (true_len - 1).reshape(1, 1, 1).astype(jnp.int32),
+            axis=1)[:, 0]
+        tok = sample(last, self.cfg.vocab_size, self.sampler, self._key)
+        return tok, caches
+
+    def _decode_step(self, params, caches, tokens, key):
+        logits, _aux, new_caches = api.forward(
+            params, {"tokens": tokens[:, None]}, self.cfg, mode="decode",
+            caches=caches, remat="none")
+        tok = sample(logits[:, -1], self.cfg.vocab_size, self.sampler, key)
+        return tok, new_caches
+
+    # ------------------------------------------------------------- requests
+
+    def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=list(prompt), max_new=max_new)
+        self.requests[rid] = req
+        self.pending.append(req)
+        return rid
+
+    def _write_slot(self, slot: int, one_caches, prompt_len: int):
+        """Copy a prefilled (batch=1, padded-bucket) cache into pool slot,
+        using the structural slot-axis map."""
+        def put(pool, one, ax):
+            if ax is None or pool.ndim == 0 or one.ndim == 0:
+                return pool
+            src = one
+            # pad/crop every mismatched trailing axis (the sequence axis
+            # of KV leaves; recurrent-state leaves already match)
+            for sax in range(one.ndim):
+                if sax == ax or one.shape[sax] == pool.shape[sax]:
+                    continue
+                diff = pool.shape[sax] - src.shape[sax]
+                if diff > 0:
+                    w = [(0, 0)] * src.ndim
+                    w[sax] = (0, diff)
+                    src = jnp.pad(src, w)
+                else:
+                    src = jax.lax.slice_in_dim(src, 0, pool.shape[sax],
+                                               axis=sax)
+            idx = [slice(None)] * pool.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return pool.at[tuple(idx)].set(src.astype(pool.dtype))
+
+        pool_len = self.caches["len"]
+        one_caches = dict(one_caches)
+        one_caches.pop("len", None)
+        tree = dict(self.caches)
+        tree.pop("len")
+        ax_tree = dict(self._slot_ax)
+        ax_tree.pop("len", None)
+        self.caches = jax.tree.map(put, tree, one_caches, ax_tree)
+        self.caches["len"] = pool_len.at[slot].set(prompt_len)
+
+    # ----------------------------------------------------------------- tick
+
+    def step(self) -> int:
+        """One engine tick: admit -> prefill -> decode.  Returns number of
+        tokens produced."""
+        # 1. admission (slots are warps; wspawn)
+        while self.pending:
+            slot = self.sched.admit()
+            if slot < 0:
+                break
+            req = self.pending.pop(0)
+            req.slot = slot
+            self._slot_req = getattr(self, "_slot_req", {})
+            self._slot_req[slot] = req
+
+        # 2. prefill stalled slots (memory-wait analogue)
+        for slot in np.flatnonzero(self.sched.active & self.sched.stalled):
+            req = self._slot_req[int(slot)]
+            L = len(req.prompt)
+            buck = self.bucket
+            while buck < L:
+                buck *= 2
+            toks = np.zeros((1, buck), np.int32)
+            toks[0, :L] = req.prompt
+            tok, one = self._prefill_fn(self.params, jnp.asarray(toks),
+                                        jnp.asarray([L], jnp.int32))
+            self._write_slot(int(slot), one, L)
+            self.last_tok[slot] = int(tok[0])
+            req.out.append(int(tok[0]))
+            self.lens[slot] = L
+            self.sched.prefill_done(int(slot))
+
+        # 3. decode tick over selected slots
+        picked = self.sched.next_batch(self.decode_width)
+        if not picked:
+            return 0
+        sel = np.zeros(self.n_slots, bool)
+        sel[picked] = True
+        # lanes not selected decode too (masked); their state is restored
+        old_caches = self.caches
+        self._key, k = jax.random.split(self._key)
+        toks = jnp.asarray(self.last_tok)
+        new_tok, new_caches = self._decode_fn(self.params, self.caches,
+                                              toks, k)
+        selj = jnp.asarray(sel)
+
+        def keep(new, old, ax):
+            if ax is None or new.ndim == 0:
+                return new
+            shape = [1] * new.ndim
+            shape[ax] = self.n_slots
+            m = selj.reshape(shape)
+            return jnp.where(m, new, old)
+
+        self.caches = jax.tree.map(keep, new_caches, old_caches,
+                                   self._slot_ax)
+        self.caches["len"] = jnp.where(selj, new_caches["len"],
+                                       old_caches["len"])
+
+        produced = 0
+        toks_np = np.asarray(new_tok)
+        for slot in picked:
+            req = self._slot_req[slot]
+            t = int(toks_np[slot])
+            req.out.append(t)
+            self.last_tok[slot] = t
+            self.lens[slot] += 1
+            produced += 1
+            if t == self.eos_id or len(req.out) >= req.max_new \
+                    or self.lens[slot] >= self.max_len - 1:
+                req.done = True
+                self.sched.retire(slot)
+        return produced
+
+    def run(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            busy = self.pending or self.sched.active.any()
+            if not busy:
+                break
+            self.step()
+
+    def results(self) -> Dict[int, List[int]]:
+        return {rid: r.out for rid, r in self.requests.items()}
+
+
+def _slot_axis(arr, n_slots: int) -> Optional[int]:
+    for ax, d in enumerate(arr.shape):
+        if d == n_slots:
+            return ax
+    return None

@@ -1,0 +1,87 @@
+"""Request scheduler for continuous batching, built from the Vortex warp
+scheduler's 4-mask design (§IV-B) — the masks are literally computed with
+the same functions the cycle-level simulator uses
+(repro.core.simt.scheduler):
+
+  warp                    <->  request slot
+  active mask             <->  slot holds a live request
+  stalled mask            <->  request admitted but not yet prefilled
+                               (waiting on "memory" — the KV cache fill)
+  barrier mask            <->  slots parked for group-synchronous steps
+                               (e.g. beam/ensemble groups)
+  visible mask + refill   <->  the two-level scheduling window: each decode
+                               tick selects up to `width` visible slots,
+                               invalidates them, and refills when drained —
+                               giving older requests the same round-robin
+                               fairness hierarchical warp scheduling gives
+                               warps [18].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simt import scheduler as hw
+
+
+@dataclasses.dataclass
+class RequestScheduler:
+    n_slots: int
+
+    def __post_init__(self):
+        z = np.zeros(self.n_slots, bool)
+        self.active = z.copy()
+        self.stalled = z.copy()
+        self.barrier = z.copy()
+        self.visible = z.copy()
+
+    # -- mask ops (delegating to the hardware-model mask algebra) ----------
+
+    def _select_batch(self, width: int) -> List[int]:
+        picked: List[int] = []
+        visible = jnp.asarray(self.visible)
+        active = jnp.asarray(self.active)
+        stalled = jnp.asarray(self.stalled)
+        barrier = jnp.asarray(self.barrier)
+        for _ in range(width):
+            wid, visible = hw.step_masks(visible, active, stalled, barrier)
+            wid = int(wid)
+            if wid >= self.n_slots or wid in picked:
+                # a slot issues at most once per tick (a warp cannot be
+                # re-issued before its instruction completes)
+                break
+            picked.append(wid)
+        self.visible = np.array(visible)      # writable copy
+        return picked
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def admit(self) -> int:
+        """Claim a free slot (active+stalled until prefill completes);
+        -1 if the pool is full."""
+        free = np.flatnonzero(~self.active)
+        if len(free) == 0:
+            return -1
+        s = int(free[0])
+        self.active[s] = True
+        self.stalled[s] = True
+        return s
+
+    def prefill_done(self, slot: int) -> None:
+        self.stalled[slot] = False
+
+    def retire(self, slot: int) -> None:
+        self.active[slot] = False
+        self.stalled[slot] = False
+        self.barrier[slot] = False
+        self.visible[slot] = False
+
+    def schedulable(self) -> np.ndarray:
+        return self.active & ~self.stalled & ~self.barrier
+
+    def next_batch(self, width: int) -> List[int]:
+        """Slots to decode this tick (the warp-issue analogue)."""
+        return self._select_batch(width)

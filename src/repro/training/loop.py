@@ -1,0 +1,134 @@
+"""Training step and loop: cross-entropy LM loss, grad accumulation over
+microbatches (lax.scan), mixed-precision AdamW, optional int8 gradient
+compression with error feedback.
+
+The step function is shape-polymorphic over architectures: any family the
+model API supports trains through the same code path (whisper trains on
+(frames, tokens); VLM on (patch_embeds, tokens)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed import compression
+from repro.models import api
+from repro.models.common import padded_vocab
+from repro.training import optimizer as opt_mod
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_mod.OptState
+    err: Any          # compression error-feedback tree (None when disabled)
+
+
+def init_train_state(key, cfg: ModelConfig, tc: TrainConfig,
+                     tp: int = 1) -> TrainState:
+    params = api.build_params(key, cfg, tp=tp)
+    opt = opt_mod.init_opt_state(params)
+    err = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+           if tc.grad_compression != "none" else None)
+    return TrainState(params=params, opt=opt, err=err)
+
+
+def train_state_specs(cfg: ModelConfig, tc: TrainConfig):
+    """Logical-axis spec tree mirroring TrainState."""
+    p = api.param_specs(cfg)
+    return TrainState(params=p, opt=opt_mod.opt_state_specs(p),
+                      err=p if tc.grad_compression != "none" else None)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean token NLL in fp32.  Padded-vocab columns are masked out.
+
+    labels < 0 are ignored (padding positions)."""
+    lf = logits.astype(jnp.float32)
+    vp = lf.shape[-1]
+    if vp > vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0)
+        lf = jnp.where(col < vocab_size, lf, -1e30)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def _split_batch(batch: Dict[str, Any], n_mb: int) -> Dict[str, Any]:
+    """[B, ...] -> [n_mb, B/n_mb, ...] for every leaf."""
+    def sp(x):
+        return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, *, tp: int = 1,
+                    global_batch: Optional[int] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    If tc.microbatch is set and divides the global batch, gradients are
+    accumulated over global_batch // microbatch scan steps (activation
+    memory scales with the microbatch, not the global batch).
+    """
+
+    def loss_fn(params, mb):
+        logits, aux, _ = api.forward(params, mb, cfg, tp=tp, mode="train",
+                                     remat=tc.remat)
+        labels = mb["labels"]
+        if cfg.family == "vlm":       # loss only over the text positions
+            logits = logits[:, -labels.shape[1]:]
+        ce = cross_entropy(logits, labels, cfg.vocab_size)
+        return ce + aux, (ce, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accumulate(params, batch):
+        B = batch["tokens"].shape[0]
+        mb = tc.microbatch
+        if not mb or mb >= B or B % mb:
+            (loss, (ce, aux)), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            return grads, {"loss": loss, "ce": ce, "aux": aux}
+        n_mb = B // mb
+        mbs = _split_batch(batch, n_mb)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def step(carry, mb_batch):
+            gacc, lacc = carry
+            (loss, (ce, aux)), grads = grad_fn(params, mb_batch)
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n_mb, gacc, grads)
+            return (gacc, lacc + jnp.stack([loss, ce, aux]) / n_mb), None
+
+        (grads, sums), _ = jax.lax.scan(step, (g0, jnp.zeros(3)), mbs)
+        return grads, {"loss": sums[0], "ce": sums[1], "aux": sums[2]}
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        grads, metrics = accumulate(state.params, batch)
+        err = state.err
+        if tc.grad_compression == "int8":
+            grads, err = compression.int8_compress_decompress(grads, err)
+        params, opt, om = opt_mod.adamw_update(state.params, grads,
+                                               state.opt, tc)
+        metrics.update(om)
+        return TrainState(params=params, opt=opt, err=err), metrics
+
+    return train_step
+
+
+def donate_argnums_for_train_step() -> Tuple[int, ...]:
+    return (0,)     # state buffers are donated; batch is not

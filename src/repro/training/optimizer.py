@@ -1,0 +1,94 @@
+"""Mixed-precision AdamW with fp32 master weights, implemented on pytrees.
+
+State layout (all trees mirror params, structurally identical so one
+sharding-spec tree serves all four):
+  master: fp32 copy of every param (the tiny already-fp32 leaves — routers,
+          gate biases, SSM decay params — are duplicated; the cost is noise
+          next to m/v)
+  m, v:   fp32 first/second moments
+  step:   int32 scalar
+
+The update runs entirely in fp32 against the master copy, then casts back
+to the model dtype.  Sharding: every state tree inherits the param's
+logical axes (optimizer state is sharded exactly like the weight — the
+FSDP/"ZeRO" layout).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    master: Any
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init_opt_state(params) -> OptState:
+    # copy=True matters: .astype(f32) on an already-f32 leaf (routers, SSM
+    # decay params) would ALIAS the param buffer into the master copy, and
+    # a donating train step then donates the same buffer twice (crash).
+    master = jax.tree.map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(master=master, m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros), step=jnp.int32(0))
+
+
+def opt_state_specs(pspecs) -> OptState:
+    """Logical-axis spec trees for the optimizer state (mirror params)."""
+    return OptState(master=pspecs, m=pspecs, v=pspecs, step=None)
+
+
+def lr_schedule(step, tc: TrainConfig):
+    """Linear warmup then cosine decay to 10%."""
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, opt: OptState, tc: TrainConfig
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step.  grads are fp32 (accumulated); returns new params in
+    the model dtype, new state, metrics."""
+    step = opt.step + 1
+    lr = lr_schedule(step, tc)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if tc.grad_clip else jnp.float32(1.0)
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mast, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        # decoupled weight decay on matrices only (ndim >= 2), standard
+        wd = tc.weight_decay if p.ndim >= 2 else 0.0
+        x = mast - lr * (mhat / (jnp.sqrt(vhat) + tc.eps) + wd * mast)
+        return x.astype(p.dtype), x, m, v
+
+    out = jax.tree.map(upd, params, grads, opt.master, opt.m, opt.v)
+    new_params = jax.tree.map(lambda _, o: o[0], params, out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    pick = lambda i: jax.tree.map(lambda _, o: o[i], params, out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_opt = OptState(master=pick(1), m=pick(2), v=pick(3), step=step)
+    return new_params, new_opt, {"lr": lr, "grad_norm": gnorm}

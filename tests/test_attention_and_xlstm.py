@@ -1,0 +1,149 @@
+"""Model math: flash attention (fwd + custom VJP), ragged decode, chunked
+mLSTM vs sequential, SSD chunked vs decode-step consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import xlstm
+from repro.models.attention import (cache_update, decode_attention,
+                                    flash_attention_jnp)
+
+
+def naive_attn(q, k, v, causal=True, window=None):
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / np.sqrt(D)
+    pos = jnp.arange(S)
+    m = jnp.ones((S, S), bool)
+    if causal:
+        m &= pos[:, None] >= pos[None, :]
+    if window:
+        m &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v).reshape(B, S, H, D)
+
+
+@pytest.mark.parametrize("causal,window,qc,kc", [
+    (True, None, 16, 16), (True, 7, 16, 8), (False, None, 32, 16)])
+def test_flash_forward(causal, window, qc, kc):
+    B, S, H, KV, D = 2, 64, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    out = flash_attention_jnp(q, k, v, causal=causal, window=window,
+                              bidirectional=not causal, q_chunk=qc,
+                              k_chunk=kc)
+    ref = naive_attn(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 5)])
+def test_flash_custom_vjp_grads(causal, window):
+    B, S, H, KV, D = 2, 32, 4, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    dt = jax.random.normal(ks[3], (B, S, H, D))
+    f1 = lambda *a: jnp.sum(flash_attention_jnp(
+        *a, causal=causal, window=window, q_chunk=8, k_chunk=8) * dt)
+    f2 = lambda *a: jnp.sum(naive_attn(*a, causal=causal,
+                                       window=window) * dt)
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_ragged_decode_equals_per_slot():
+    """decode_attention with a [B] len vector == per-example decode."""
+    B, Smax, KV, H, D = 3, 16, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    kc = jax.random.normal(ks[1], (B, Smax, KV, D))
+    vc = jax.random.normal(ks[2], (B, Smax, KV, D))
+    lens = jnp.asarray([3, 16, 9])
+    out = decode_attention(q, kc, vc, lens)
+    for b in range(B):
+        ref = decode_attention(q[b:b + 1], kc[b:b + 1], vc[b:b + 1],
+                               jnp.int32(lens[b]))
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(ref[0]),
+                                   atol=1e-5)
+
+
+def test_ragged_cache_update_writes_per_slot_position():
+    B, Smax, KV, D = 3, 8, 2, 4
+    kc = jnp.zeros((B, Smax, KV, D))
+    vc = jnp.zeros((B, Smax, KV, D))
+    new = jnp.ones((B, 1, KV, D))
+    lens = jnp.asarray([0, 3, 7])
+    k2, v2 = cache_update(kc, vc, new, new, lens)
+    for b, l in enumerate([0, 3, 7]):
+        assert float(k2[b, l].sum()) == KV * D
+        assert float(k2[b].sum()) == KV * D      # only one row written
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (48, 16), (65, 13)])
+def test_chunked_mlstm_equals_sequential(S, chunk):
+    cfg = reduced_config("xlstm-125m")
+    p = xlstm.init_mlstm(jax.random.PRNGKey(3), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, S, cfg.d_model)) * 0.5
+    y1, c1 = xlstm.mlstm_forward(p, x, cfg, mode="prefill",
+                                 use_chunked=False)
+    y2, c2 = xlstm.mlstm_forward(p, x, cfg, mode="prefill",
+                                 use_chunked=True, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=5e-4)
+    for kk in ("C", "n", "m"):
+        np.testing.assert_allclose(np.asarray(c1[kk]), np.asarray(c2[kk]),
+                                   atol=5e-4)
+
+
+def test_ssd_prefill_then_decode_continuity():
+    """Chunked SSD prefill state continues exactly into decode steps."""
+    from repro.models import ssm
+    cfg = reduced_config("zamba2-7b")
+    p = ssm.init_mamba2(jax.random.PRNGKey(5), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 24, cfg.d_model)) * 0.3
+    # full prefill over 24 tokens
+    y_all, cache = ssm.mamba2_forward(p, x, cfg, mode="prefill")
+    # prefill 23 then decode 1
+    y23, c23 = ssm.mamba2_forward(p, x[:, :23], cfg, mode="prefill")
+    y24, _ = ssm.mamba2_forward(p, x[:, 23:24], cfg, mode="decode",
+                                cache=c23)
+    np.testing.assert_allclose(np.asarray(y_all[:, -1]),
+                               np.asarray(y24[:, 0]), atol=1e-3)
+
+
+def test_int8_kv_cache_decode_close_to_exact():
+    """Quantized decode: greedy tokens identical, logits within a few %."""
+    from repro.configs import reduced_config
+    from repro.models import api
+    cfg = reduced_config("phi3-mini-3.8b").replace(num_layers=2)
+    params = api.build_params(jax.random.PRNGKey(0), cfg)
+    B, L = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0,
+                              cfg.vocab_size)
+    lg, _, c = api.forward(params, {"tokens": toks}, cfg, mode="prefill",
+                           remat="none")
+    c = api.grow_caches(cfg, c, 24)
+    t = jnp.argmax(lg[:, -1, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+    lg_exact, _, _ = api.forward(params, {"tokens": t}, cfg, mode="decode",
+                                 caches=c, remat="none")
+    cq = api.init_caches(cfg, B, 24, kv_quant=True)
+    for i in range(L):
+        lgq, _, cq = api.forward(params, {"tokens": toks[:, i:i + 1]}, cfg,
+                                 mode="decode", caches=cq, remat="none")
+    lg_q, _, _ = api.forward(params, {"tokens": t}, cfg, mode="decode",
+                             caches=cq, remat="none")
+    a = np.asarray(lg_exact[:, -1, :cfg.vocab_size], np.float32)
+    b = np.asarray(lg_q[:, -1, :cfg.vocab_size], np.float32)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert rel < 0.1, rel
+    assert (a.argmax(-1) == b.argmax(-1)).all()

@@ -1,0 +1,121 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simt import isa, scheduler
+from repro.core.spawn import spawn_ranges
+from repro.distributed.compression import _dequantize, _quantize
+from repro.models.attention import _pick_chunk
+from repro.training.loop import cross_entropy
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# pocl-spawn work division (paper step 2/3): exact cover, no overlap
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 5000), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_spawn_ranges_exact_cover(n_items, n_dev):
+    ranges = spawn_ranges(n_items, n_dev)
+    seen = []
+    for a, b in ranges:
+        assert 0 <= a <= b <= n_items
+        seen.extend(range(a, b))
+    assert seen == list(range(n_items))
+
+
+# ---------------------------------------------------------------------------
+# ISA encode/decode round trip
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 31), st.integers(0, 31), st.integers(0, 31),
+       st.integers(-2048, 2047))
+@settings(**SETTINGS)
+def test_itype_fields_roundtrip(rd, rs1, _rs2, imm):
+    word = isa.encode("addi", rd=rd, rs1=rs1, imm=imm)
+    assert (word & 0x7F) == isa.OP_IMM
+    assert ((word >> 7) & 31) == rd
+    assert ((word >> 15) & 31) == rs1
+    got = (word >> 20) & 0xFFF
+    if got >= 2048:
+        got -= 4096
+    assert got == imm
+
+
+@given(st.integers(-4096, 4094).map(lambda x: x & ~1))
+@settings(**SETTINGS)
+def test_btype_imm_roundtrip(imm):
+    word = isa.encode("beq", rs1=1, rs2=2, imm=imm)
+    got = ((((word >> 31) & 1) << 12) | (((word >> 7) & 1) << 11)
+           | (((word >> 25) & 0x3F) << 5) | (((word >> 8) & 0xF) << 1))
+    if got >= 4096:
+        got -= 8192
+    assert got == imm
+
+
+# ---------------------------------------------------------------------------
+# scheduler mask invariants
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.booleans(), st.booleans(), st.booleans(),
+                          st.booleans()), min_size=2, max_size=8))
+@settings(**SETTINGS)
+def test_scheduler_never_selects_unschedulable(rows):
+    active = jnp.asarray([r[0] for r in rows])
+    stalled = jnp.asarray([r[1] for r in rows])
+    barrier = jnp.asarray([r[2] for r in rows])
+    visible = jnp.asarray([r[3] for r in rows])
+    wid, new_visible = scheduler.step_masks(visible, active, stalled,
+                                            barrier)
+    w = int(wid)
+    if w < len(rows):
+        assert bool(active[w]) and not bool(stalled[w]) \
+            and not bool(barrier[w])
+        assert not bool(new_visible[w])      # selected warp invalidated
+    else:
+        sched = scheduler.schedulable(active, stalled, barrier)
+        assert not bool(jnp.any(sched))
+
+
+# ---------------------------------------------------------------------------
+# int8 compression: bounded quantization error
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,
+                max_size=64))
+@settings(**SETTINGS)
+def test_quantize_error_bound(vals):
+    g = jnp.asarray(vals, jnp.float32)
+    q, s = _quantize(g)
+    err = jnp.abs(_dequantize(q, s) - g)
+    assert float(err.max()) <= float(s) / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# misc numeric helpers
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4096), st.integers(1, 512))
+@settings(**SETTINGS)
+def test_pick_chunk_divides(S, target):
+    c = _pick_chunk(S, target)
+    assert 1 <= c <= min(S, target)
+    assert S % c == 0
+
+
+@given(st.integers(2, 6), st.integers(3, 17))
+@settings(**SETTINGS)
+def test_cross_entropy_matches_manual(B, V):
+    key = jax.random.PRNGKey(B * 131 + V)
+    logits = jax.random.normal(key, (B, 1, V + 3))   # padded vocab by 3
+    labels = jax.random.randint(key, (B, 1), 0, V)
+    got = float(cross_entropy(logits, labels, V))
+    lf = np.asarray(logits)[:, :, :V].astype(np.float64)
+    p = np.exp(lf - lf.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    nll = -np.log([p[b, 0, int(labels[b, 0])] for b in range(B)])
+    assert abs(got - nll.mean()) < 1e-3

@@ -1,0 +1,303 @@
+"""SIMT machine semantics: ISA execution, divergence, barriers, scheduler.
+
+These are the §IV microarchitecture contracts — Fig 6 scenarios, split/join
+IPDOM behaviour (including the uniform shortcut), wspawn/tmc, barrier
+release masks, and the RV32IM/Zfinx execute stage against numpy.
+"""
+import numpy as np
+import pytest
+
+from repro.core.simt import machine, scheduler
+from repro.core.simt.machine import MachineConfig
+from repro.runtime.asm import assemble
+
+MC = MachineConfig(warps=4, threads=4, max_cycles=100_000)
+
+
+def run_src(src, mc=MC, dmem=None):
+    st = machine.run(mc, assemble(src), dmem_image=dmem)
+    return st, machine.stats_dict(st)
+
+
+def words(st, addr, n):
+    return list(np.asarray(st.dmem[addr // 4: addr // 4 + n]))
+
+
+# ---------------------------------------------------------------------------
+# execute stage vs numpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op,a,b,expect", [
+    ("add", 7, -3, 4), ("sub", 7, 9, -2), ("and", 0b1100, 0b1010, 0b1000),
+    ("or", 0b1100, 0b1010, 0b1110), ("xor", 0b1100, 0b1010, 0b0110),
+    ("sll", 3, 4, 48), ("srl", -8, 1, 0x7FFFFFFC), ("sra", -8, 1, -4),
+    ("slt", -5, 3, 1), ("sltu", -5, 3, 0),
+    ("mul", -7, 6, -42), ("div", -7, 2, -3), ("rem", -7, 2, -1),
+    ("divu", 7, 2, 3), ("remu", 7, 2, 1),
+])
+def test_alu_ops(op, a, b, expect):
+    src = f"""
+    li t0, {a}
+    li t1, {b}
+    {op} t2, t0, t1
+    li t3, 0x200
+    sw t2, 0(t3)
+    halt
+"""
+    st, _ = run_src(src)
+    assert words(st, 0x200, 1)[0] == np.int32(expect)
+
+
+def test_div_by_zero_riscv_semantics():
+    st, _ = run_src("""
+    li t0, 17
+    li t1, 0
+    div t2, t0, t1
+    rem t3, t0, t1
+    li t4, 0x200
+    sw t2, 0(t4)
+    sw t3, 4(t4)
+    halt
+""")
+    assert words(st, 0x200, 2) == [-1, 17]
+
+
+def test_mulh_matches_numpy():
+    a, b = -123456789, 987654321
+    expect = int((np.int64(a) * np.int64(b)) >> 32)
+    st, _ = run_src(f"""
+    li t0, {a}
+    li t1, {b}
+    mulh t2, t0, t1
+    li t3, 0x200
+    sw t2, 0(t3)
+    halt
+""")
+    assert words(st, 0x200, 1)[0] == np.int32(expect)
+
+
+def test_float_zfinx():
+    import struct
+    fa, fb = 2.5, -0.75
+    bits = lambda f: struct.unpack("<i", struct.pack("<f", np.float32(f)))[0]
+    st, _ = run_src(f"""
+    li t0, {bits(fa)}
+    li t1, {bits(fb)}
+    fadd.s t2, t0, t1
+    fmul.s t3, t0, t1
+    fdiv.s t4, t0, t1
+    flt.s  t5, t1, t0
+    li a0, 0x200
+    sw t2, 0(a0)
+    sw t3, 4(a0)
+    sw t4, 8(a0)
+    sw t5, 12(a0)
+    halt
+""")
+    got = np.asarray(words(st, 0x200, 4), np.int32)
+    f = got[:3].view(np.float32)
+    assert abs(f[0] - (fa + fb)) < 1e-6
+    assert abs(f[1] - (fa * fb)) < 1e-6
+    assert abs(f[2] - (fa / fb)) < 1e-6
+    assert got[3] == 1
+
+
+# ---------------------------------------------------------------------------
+# SIMT: tmc, wspawn, divergence
+# ---------------------------------------------------------------------------
+
+def test_tmc_thread_mask_predication():
+    """Lanes outside the mask must not write registers or memory."""
+    st, _ = run_src("""
+    nt t0
+    tmc t0
+    tid t1
+    slli t2, t1, 2
+    li t3, 0x200
+    add t2, t2, t3
+    li t4, 1
+    sw t4, 0(t2)          # all 4 lanes write 1
+    li t5, 2
+    tmc t5                # keep lanes 0,1 only
+    li t4, 9
+    sw t4, 0(t2)          # only lanes 0,1 overwrite
+    halt
+""")
+    assert words(st, 0x200, 4) == [9, 9, 1, 1]
+
+
+def test_wspawn_activates_warps_and_they_run():
+    st, stats = run_src("""
+    nw a0
+    la a1, _wmain
+    wspawn a0, a1
+    j _wmain
+_wmain:
+    nt t0
+    tmc t0
+    wid t1
+    slli t2, t1, 2
+    li t3, 0x200
+    add t2, t2, t3
+    addi t4, t1, 100
+    sw t4, 0(t2)
+    halt
+""")
+    assert words(st, 0x200, 4) == [100, 101, 102, 103]
+
+
+def test_split_join_divergent_and_nested():
+    st, stats = run_src("""
+    nt t0
+    tmc t0
+    tid t1
+    li t6, 0
+    slti t2, t1, 2        # lanes 0,1
+    __if t2
+    addi t6, t6, 1
+    slti t3, t1, 1        # nested: lane 0 only
+    __if t3
+    addi t6, t6, 10
+    __endif
+    __else
+    addi t6, t6, 100
+    __endif
+    slli t2, t1, 2
+    li t3, 0x200
+    add t2, t2, t3
+    sw t6, 0(t2)
+    halt
+""")
+    assert words(st, 0x200, 4) == [11, 1, 100, 100]
+    assert stats["divergence_violations"] == 0
+    assert stats["divergent_splits"] == 2
+
+
+def test_uniform_split_is_nop_on_mask():
+    """All-true predicate: thread mask unchanged (paper's nop shortcut),
+    and the else path is skipped (not executed with an empty mask)."""
+    st, stats = run_src("""
+    nt t0
+    tmc t0
+    li t1, 1              # uniform true
+    li t6, 0
+    __if t1
+    addi t6, t6, 5
+    __else
+    addi t6, t6, 777      # must never run
+    __endif
+    tid t2
+    slli t2, t2, 2
+    li t3, 0x200
+    add t2, t2, t3
+    sw t6, 0(t2)
+    halt
+""")
+    assert words(st, 0x200, 4) == [5, 5, 5, 5]
+    assert stats["divergent_splits"] == 0
+    assert stats["uniform_splits"] == 1
+
+
+def test_uniform_false_split_skips_then():
+    st, stats = run_src("""
+    nt t0
+    tmc t0
+    li t1, 0              # uniform false
+    li t6, 0
+    __if t1
+    addi t6, t6, 777      # must never run
+    __else
+    addi t6, t6, 3
+    __endif
+    tid t2
+    slli t2, t2, 2
+    li t3, 0x200
+    add t2, t2, t3
+    sw t6, 0(t2)
+    halt
+""")
+    assert words(st, 0x200, 4) == [3, 3, 3, 3]
+
+
+def test_barrier_releases_all_warps():
+    """Warps spin on different arrival times; the release mask frees all
+    (§IV-D)."""
+    st, stats = run_src("""
+    nw a0
+    la a1, _wmain
+    wspawn a0, a1
+    j _wmain
+_wmain:
+    nt t0
+    tmc t0
+    wid t1
+    # warp w busy-waits ~w*8 cycles before the barrier
+    slli t2, t1, 3
+_spin:
+    addi t2, t2, -1
+    bge t2, zero, _spin
+    li a0, 1
+    nw a1
+    bar a0, a1
+    # after release, every warp stamps its arrival
+    wid t1
+    slli t2, t1, 2
+    li t3, 0x200
+    add t2, t2, t3
+    li t4, 55
+    sw t4, 0(t2)
+    halt
+""")
+    assert words(st, 0x200, 4) == [55, 55, 55, 55]
+    assert stats["barrier_waits"] == 3        # all but the last arriver
+
+
+# ---------------------------------------------------------------------------
+# scheduler mask algebra (Fig 6)
+# ---------------------------------------------------------------------------
+
+def _m(*bits):
+    import jax.numpy as jnp
+    return jnp.asarray(list(bits), dtype=bool)
+
+
+def test_fig6a_normal_rotation():
+    active = _m(1, 1, 0, 0)
+    stalled = _m(0, 0, 0, 0)
+    barrier = _m(0, 0, 0, 0)
+    visible = _m(0, 0, 0, 0)
+    w0, visible = scheduler.step_masks(visible, active, stalled, barrier)
+    w1, visible = scheduler.step_masks(visible, active, stalled, barrier)
+    w2, visible = scheduler.step_masks(visible, active, stalled, barrier)
+    assert [int(w0), int(w1), int(w2)] == [0, 1, 0]   # refill at cycle 3
+
+
+def test_fig6b_stalled_warp_skipped():
+    active = _m(1, 1, 0, 0)
+    stalled = _m(1, 0, 0, 0)        # warp 0 stalled
+    barrier = _m(0, 0, 0, 0)
+    visible = _m(0, 0, 0, 0)
+    w0, visible = scheduler.step_masks(visible, active, stalled, barrier)
+    w1, visible = scheduler.step_masks(visible, active, stalled, barrier)
+    assert [int(w0), int(w1)] == [1, 1]
+
+
+def test_fig6c_wspawn_pickup_on_refill():
+    active = _m(1, 0, 1, 1)          # warps 2,3 just spawned
+    stalled = _m(0, 0, 0, 0)
+    barrier = _m(0, 0, 0, 0)
+    visible = _m(0, 0, 0, 0)
+    order = []
+    for _ in range(3):
+        w, visible = scheduler.step_masks(visible, active, stalled, barrier)
+        order.append(int(w))
+    assert order == [0, 2, 3]
+
+
+def test_no_schedulable_warp_returns_W():
+    active = _m(1, 0, 0, 0)
+    stalled = _m(1, 0, 0, 0)
+    barrier = _m(0, 0, 0, 0)
+    visible = _m(0, 0, 0, 0)
+    w, _ = scheduler.step_masks(visible, active, stalled, barrier)
+    assert int(w) == 4              # = W => idle cycle
