@@ -6,9 +6,12 @@ full-size (cache-exceeding) graph — §V-D's two regimes.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict, Tuple
 
+from repro import obs
 from repro.core.simt.machine import MachineConfig
 from repro.runtime.kernels_src import rodinia
 
@@ -35,24 +38,49 @@ def run_all(configs=CONFIGS, benches=BENCHES):
         for w, t in configs:
             mc = MachineConfig(warps=w, threads=t, max_cycles=12_000_000,
                                miss_latency=ml)
-            res, ok = rodinia.BENCHMARKS[name](mc, **kw)
+            with obs.trace.span(f"simt:{name}", warps=w, threads=t):
+                res, ok = rodinia.BENCHMARKS[name](mc, **kw)
             assert ok, f"{name} failed verification at {w}x{t}"
             out[(name, w, t)] = res.stats
     return out
 
 
-def main():
-    t0 = time.time()
-    stats = run_all()
+def print_table(stats, configs=CONFIGS, benches=BENCHES):
     print("bench,config,cycles,normalized_to_2x2,instrs,dcache_miss_rate")
-    for name in BENCHES:
+    for name in benches:
         base = stats[(name, 2, 2)]["cycles"]
-        for w, t in CONFIGS:
+        for w, t in configs:
             s = stats[(name, w, t)]
             mr = s["dcache_misses"] / max(
                 s["dcache_misses"] + s["dcache_hits"], 1)
             print(f"{name},{w}w{t}t,{s['cycles']},"
                   f"{s['cycles']/base:.3f},{s['instrs']},{mr:.3f}")
+
+
+def results_doc(stats) -> dict:
+    """Machine-readable results: raw stats + derived PerfReport per
+    (bench, config), keyed 'bench/4w8t'."""
+    out = {}
+    for (name, w, t), s in stats.items():
+        rep = obs.PerfReport.from_stats(s, warps=w, threads=t)
+        out[f"{name}/{w}w{t}t"] = {"stats": dict(s),
+                                   "perf": rep.as_dict()}
+    return out
+
+
+def main(out_dir=None):
+    out_dir = out_dir or os.environ.get("REPRO_BENCH_OUT", "bench_out")
+    os.makedirs(out_dir, exist_ok=True)
+    obs.enable_tracing()
+    t0 = time.time()
+    stats = run_all()
+    print_table(stats)
+    with open(os.path.join(out_dir, "BENCH_fig9_rodinia.json"), "w") as f:
+        json.dump(results_doc(stats), f, indent=1)
+    obs.write_chrome_trace(os.path.join(out_dir, "fig9_rodinia.trace.json"),
+                           obs.tracer.drain())
+    print(f"# artifacts: {out_dir}/BENCH_fig9_rodinia.json + "
+          f"fig9_rodinia.trace.json")
     print(f"# fig9 wall time {time.time()-t0:.0f}s")
 
 

@@ -1,39 +1,77 @@
 """Benchmark entry point: one section per paper table/figure + the
-roofline table.  `PYTHONPATH=src python -m benchmarks.run`"""
+roofline table.  `PYTHONPATH=src python -m benchmarks.run`
+
+Every run also emits machine-readable artifacts (so the perf trajectory
+is tracked across PRs) into `--out-dir` (default `bench_out/`, override
+with REPRO_BENCH_OUT):
+
+  BENCH_fig9_rodinia.json   per-(bench, config) SIMT stats + PerfReports
+  BENCH_run.json            section wall times + global metrics snapshot
+  run.trace.json            Chrome/Perfetto trace of the whole run
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 
+from repro import obs
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir",
+                    default=os.environ.get("REPRO_BENCH_OUT", "bench_out"))
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+    obs.enable_tracing()
+
     t0 = time.time()
+    section_s = {}
+
     print("==== Fig 8: area/power design-space (synthesis model) ====")
-    from benchmarks import fig8_dse
-    fig8_dse.main()
+    with obs.trace.span("fig8_dse"):
+        ts = time.time()
+        from benchmarks import fig8_dse
+        fig8_dse.main()
+        section_s["fig8_dse"] = time.time() - ts
 
     print("\n==== Fig 9: Rodinia cycles over (warps x threads) ====")
-    from benchmarks import fig9_rodinia
-    stats = fig9_rodinia.run_all()
-    print("bench,config,cycles,normalized_to_2x2,instrs,dcache_miss_rate")
-    for name in fig9_rodinia.BENCHES:
-        base = stats[(name, 2, 2)]["cycles"]
-        for w, t in fig9_rodinia.CONFIGS:
-            s = stats[(name, w, t)]
-            mr = s["dcache_misses"] / max(
-                s["dcache_misses"] + s["dcache_hits"], 1)
-            print(f"{name},{w}w{t}t,{s['cycles']},"
-                  f"{s['cycles']/base:.3f},{s['instrs']},{mr:.3f}")
+    with obs.trace.span("fig9_rodinia"):
+        ts = time.time()
+        from benchmarks import fig9_rodinia
+        stats = fig9_rodinia.run_all()
+        fig9_rodinia.print_table(stats)
+        section_s["fig9_rodinia"] = time.time() - ts
+    with open(os.path.join(args.out_dir, "BENCH_fig9_rodinia.json"),
+              "w") as f:
+        json.dump(fig9_rodinia.results_doc(stats), f, indent=1)
 
     print("\n==== Fig 10: power efficiency ====")
-    from benchmarks import fig10_power
-    fig10_power.main(stats=stats)
+    with obs.trace.span("fig10_power"):
+        ts = time.time()
+        from benchmarks import fig10_power
+        fig10_power.main(stats=stats)
+        section_s["fig10_power"] = time.time() - ts
 
     print("\n==== Roofline table (from dry-run artifacts) ====")
-    from benchmarks import roofline_table
-    roofline_table.main()
+    with obs.trace.span("roofline_table"):
+        ts = time.time()
+        from benchmarks import roofline_table
+        roofline_table.main()
+        section_s["roofline_table"] = time.time() - ts
 
-    print(f"\n# total benchmark wall time {time.time()-t0:.0f}s")
+    wall = time.time() - t0
+    with open(os.path.join(args.out_dir, "BENCH_run.json"), "w") as f:
+        json.dump({"total_wall_s": wall, "sections_wall_s": section_s,
+                   "metrics": obs.metrics.snapshot()}, f, indent=1)
+    trace_path = os.path.join(args.out_dir, "run.trace.json")
+    obs.write_chrome_trace(trace_path, obs.tracer.drain())
+    print(f"\n# artifacts in {args.out_dir}/ "
+          f"(BENCH_*.json + run.trace.json — load in Perfetto)")
+    print(f"# total benchmark wall time {wall:.0f}s")
 
 
 if __name__ == "__main__":

@@ -85,7 +85,12 @@ class State(NamedTuple):
 STAT_KEYS = ("instrs", "stall_cycles", "idle_cycles", "dcache_hits",
              "dcache_misses", "bank_conflict_cycles", "divergent_splits",
              "uniform_splits", "joins", "barrier_waits",
-             "divergence_violations", "loads", "stores")
+             "divergence_violations", "loads", "stores",
+             # telemetry counters (repro.obs.perf.PerfReport inputs):
+             # occupancy_cycles — sum over cycles of active warps,
+             # issued_lanes — sum of active lanes of issued instructions,
+             # sched_refills — visible-window refill events (§IV-B)
+             "occupancy_cycles", "issued_lanes", "sched_refills")
 
 
 def init_state(mc: MachineConfig, dmem_image: Optional[np.ndarray] = None
@@ -327,6 +332,10 @@ def make_step(mc: MachineConfig):
 
     def step(st: State, imem: jax.Array) -> State:
         stalled = st.stalled_until > st.cycle
+        # window-refill telemetry: mirrors scheduler.refill_if_empty — a
+        # refill fires when no visible warp is schedulable but some warp is
+        sched_ok = scheduler.schedulable(st.active, stalled, st.at_barrier)
+        refilled = (~jnp.any(st.visible & sched_ok)) & jnp.any(sched_ok)
         wid, visible = scheduler.step_masks(st.visible, st.active, stalled,
                                             st.at_barrier)
         issued = wid < W
@@ -616,7 +625,11 @@ def make_step(mc: MachineConfig):
         st = jax.lax.switch(gid, handlers, st)
         return st._replace(
             cycle=st.cycle + 1,
-            stats=bump(st.stats, instrs=issued.astype(I32)))
+            stats=bump(st.stats, instrs=issued.astype(I32),
+                       occupancy_cycles=st.active.sum().astype(I32),
+                       issued_lanes=jnp.where(
+                           issued, lanes.sum().astype(I32), 0),
+                       sched_refills=refilled.astype(I32)))
 
     return step
 
@@ -652,3 +665,17 @@ def stats_dict(st: State) -> Dict[str, int]:
 
 def read_words(st: State, addr: int, n: int) -> np.ndarray:
     return np.asarray(st.dmem[addr // 4: addr // 4 + n])
+
+
+def perf_report(st_or_stats, mc: Optional[MachineConfig] = None):
+    """Vortex-style derived report (IPC, stall/idle breakdown, D-cache hit
+    rate, occupancy) — see repro.obs.perf.PerfReport.
+
+    Accepts either a final State or a stats dict from `stats_dict`."""
+    from repro.obs.perf import PerfReport
+    stats = (stats_dict(st_or_stats) if isinstance(st_or_stats, State)
+             else dict(st_or_stats))
+    return PerfReport.from_stats(
+        stats,
+        warps=mc.warps if mc is not None else None,
+        threads=mc.threads if mc is not None else None)

@@ -12,6 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 
 
@@ -20,9 +21,9 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None,
-                    bq: int = 128, bk: int = 128) -> jax.Array:
+def _flash_attention(q, k, v, *, causal: bool = True,
+                     window: Optional[int] = None,
+                     bq: int = 128, bk: int = 128) -> jax.Array:
     """q: [B,S,H,D]; k,v: [B,Sk,KV,D] -> [B,S,H,D]."""
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
@@ -30,3 +31,6 @@ def flash_attention(q, k, v, *, causal: bool = True,
     o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
                             bq=bq, bk=bk, interpret=not _on_tpu())
     return o.transpose(0, 2, 1, 3)
+
+
+flash_attention = obs.instrument_kernel("flash_attention", _flash_attention)

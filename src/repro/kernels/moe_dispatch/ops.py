@@ -5,6 +5,7 @@ import functools
 
 import jax
 
+from repro import obs
 from repro.kernels.moe_dispatch.kernel import moe_gather_fwd
 
 
@@ -13,5 +14,8 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("E", "C"))
-def moe_gather(x, slot_token, *, E: int, C: int):
+def _moe_gather(x, slot_token, *, E: int, C: int):
     return moe_gather_fwd(x, slot_token, E, C, interpret=not _on_tpu())
+
+
+moe_gather = obs.instrument_kernel("moe_dispatch", _moe_gather)

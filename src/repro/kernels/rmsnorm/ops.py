@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
 
 
@@ -14,8 +15,11 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("eps",))
-def rmsnorm(x, scale, *, eps: float = 1e-5):
+def _rmsnorm(x, scale, *, eps: float = 1e-5):
     shp = x.shape
     y = rmsnorm_fwd(x.reshape(-1, shp[-1]), scale, eps=eps,
                     interpret=not _on_tpu())
     return y.reshape(shp)
+
+
+rmsnorm = obs.instrument_kernel("rmsnorm", _rmsnorm)

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 
+from repro import obs
 from repro.kernels.ssm_scan.kernel import ssd_intra_fwd
 
 
@@ -11,5 +12,8 @@ def _on_tpu() -> bool:
 
 
 @jax.jit
-def ssd_intra(cum, xdt, Bc, Cc):
+def _ssd_intra(cum, xdt, Bc, Cc):
     return ssd_intra_fwd(cum, xdt, Bc, Cc, interpret=not _on_tpu())
+
+
+ssd_intra = obs.instrument_kernel("ssm_scan", _ssd_intra)

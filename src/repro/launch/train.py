@@ -20,6 +20,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import SHAPES_BY_NAME, TrainConfig, get_config, reduced_config
 from repro.configs.base import ShapeConfig
@@ -47,7 +48,11 @@ def main(argv=None) -> int:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--compression", choices=("none", "int8"),
                     default="none")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of the run here")
     args = ap.parse_args(argv)
+    if args.trace:
+        obs.enable_tracing()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
@@ -83,21 +88,34 @@ def main(argv=None) -> int:
     ctx = shd.axis_rules(mesh, rules)
     with ctx:
         t0 = time.time()
+        t_prev = time.perf_counter()
         for step in range(start, args.steps):
             batch = next(loader)
-            state, metrics = step_fn(state, batch)
+            with obs.trace.span("train_step", step=step + 1):
+                state, metrics = step_fn(state, batch)
             if (step + 1) % args.log_every == 0 or step == start:
                 m = {k: float(v) for k, v in metrics.items()}
+                now = time.perf_counter()
+                tl.record_step_metrics(
+                    obs.metrics, m, step=step + 1,
+                    tokens=shape.tokens, dt=now - t_prev)
+                t_prev = now
                 tok_s = shape.tokens * (step + 1 - start) / (time.time() - t0)
                 print(f"step {step+1:5d}  loss {m['loss']:.4f}  "
                       f"ce {m['ce']:.4f}  gnorm {m['grad_norm']:.2f}  "
                       f"lr {m['lr']:.2e}  tok/s {tok_s:,.0f}", flush=True)
+            else:
+                t_prev = time.perf_counter()
             if mgr and (step + 1) % args.ckpt_every == 0:
-                mgr.async_save(step + 1, state,
-                               {"data_step": loader.step})
+                with obs.trace.span("checkpoint", step=step + 1):
+                    mgr.async_save(step + 1, state,
+                                   {"data_step": loader.step})
         if mgr:
             mgr.wait()
             mgr.save(args.steps, state, {"data_step": loader.step})
+    if args.trace:
+        obs.write_chrome_trace(args.trace, obs.tracer.drain())
+        print(f"[trace] wrote {args.trace}", flush=True)
     print("[done]", flush=True)
     return 0
 

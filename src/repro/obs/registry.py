@@ -1,0 +1,195 @@
+"""Metrics registry: counters, gauges, histograms — plus the jit-safe
+device-counter pattern.
+
+Host side
+---------
+A `Registry` holds named instruments.  Everything is plain Python (no JAX
+in the hot path), so recording a metric costs a dict lookup and an add:
+
+    reg = Registry()
+    reg.counter("serving.tokens").inc(4)
+    reg.gauge("serving.queue_depth").set(3)
+    reg.histogram("serving.ttft_s").observe(0.12)
+    snap = reg.snapshot()          # plain-dict summary, JSON-serializable
+
+Device side
+-----------
+Jitted/scanned code cannot mutate a host registry.  The pattern — the same
+one ``core/simt/machine.py`` uses for its ``stats`` dict — is to thread a
+``{name: jnp.int32}`` dict through the computation, bump it functionally,
+and merge it into a host registry once per step:
+
+    ctrs = device_counters("steps", "clipped")
+    def body(carry, x):
+        ctrs = carry
+        ctrs = bump(ctrs, steps=1, clipped=(x > 0).astype(jnp.int32))
+        return ctrs, None
+    ctrs, _ = jax.lax.scan(body, ctrs, xs)     # inside jit: fine
+    merge_device(reg, ctrs, prefix="train.")   # host side, after the step
+"""
+from __future__ import annotations
+
+import math
+import random
+import threading
+from typing import Any, Dict, Iterable, List, Optional
+
+__all__ = ["Counter", "Gauge", "Histogram", "Registry", "metrics",
+           "device_counters", "bump", "merge_device"]
+
+
+class Counter:
+    """Monotonic cumulative count."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def summary(self) -> Dict[str, Any]:
+        return {"type": "counter", "value": self.value}
+
+
+class Gauge:
+    """Last-written value (queue depth, loss, occupancy...)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: Optional[float] = None
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def summary(self) -> Dict[str, Any]:
+        return {"type": "gauge", "value": self.value}
+
+
+class Histogram:
+    """Streaming summary: count/sum/min/max plus a fixed-size reservoir
+    sample (Vitter's algorithm R) from which quantiles are estimated.
+
+    Deterministic: the reservoir RNG is seeded per-instance so snapshots
+    are reproducible run-to-run.
+    """
+
+    __slots__ = ("count", "total", "min", "max", "reservoir", "_cap", "_rng")
+
+    def __init__(self, reservoir_size: int = 512, seed: int = 0) -> None:
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self.reservoir: List[float] = []
+        self._cap = reservoir_size
+        self._rng = random.Random(seed)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        if len(self.reservoir) < self._cap:
+            self.reservoir.append(v)
+        else:
+            j = self._rng.randrange(self.count)
+            if j < self._cap:
+                self.reservoir[j] = v
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        if not self.reservoir:
+            return 0.0
+        xs = sorted(self.reservoir)
+        idx = min(int(q * len(xs)), len(xs) - 1)
+        return xs[idx]
+
+    def summary(self) -> Dict[str, Any]:
+        if not self.count:
+            return {"type": "histogram", "count": 0}
+        return {"type": "histogram", "count": self.count,
+                "sum": self.total, "mean": self.mean,
+                "min": self.min, "max": self.max,
+                "p50": self.quantile(0.50), "p90": self.quantile(0.90),
+                "p99": self.quantile(0.99)}
+
+
+class Registry:
+    """Named instruments, created on first use.  Thread-safe creation;
+    single-writer updates (the usual engine/train-loop pattern)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._instruments: Dict[str, Any] = {}
+
+    def _get(self, name: str, factory):
+        inst = self._instruments.get(name)
+        if inst is None:
+            with self._lock:
+                inst = self._instruments.setdefault(name, factory())
+        return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def names(self) -> Iterable[str]:
+        return sorted(self._instruments)
+
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """Plain-dict (JSON-serializable) summary of every instrument."""
+        return {k: self._instruments[k].summary() for k in self.names()}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._instruments.clear()
+
+
+# The process-global registry.  Subsystems that want isolation (e.g. one
+# serving Engine per model) create their own Registry instead.
+metrics = Registry()
+
+
+# ---------------------------------------------------------------------------
+# device-side counters (jit-safe)
+# ---------------------------------------------------------------------------
+
+def device_counters(*names: str) -> Dict[str, Any]:
+    """A ``{name: jnp.int32(0)}`` dict to thread through jitted code."""
+    import jax.numpy as jnp
+    return {n: jnp.int32(0) for n in names}
+
+
+def bump(counters: Dict[str, Any], **kw) -> Dict[str, Any]:
+    """Functional increment — safe inside jit/scan/while_loop bodies."""
+    out = dict(counters)
+    for k, v in kw.items():
+        out[k] = out[k] + v
+    return out
+
+
+def merge_device(registry: Registry, counters: Dict[str, Any],
+                 prefix: str = "") -> Dict[str, int]:
+    """Pull device counters to host and add them into `registry`.
+
+    Called once per step (after the jitted computation), so the device
+    sync cost amortizes over the whole step.  Returns the concrete values.
+    """
+    vals = {k: int(v) for k, v in counters.items()}
+    for k, v in vals.items():
+        registry.counter(prefix + k).inc(v)
+    return vals

@@ -12,12 +12,14 @@ models/attention.py decode path).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import api
 from repro.serving.sampler import SamplerConfig, sample
@@ -32,6 +34,10 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    finish_reason: str = ""            # "eos" | "max_new" | "max_len"
+    submit_t: float = 0.0
+    first_tok_t: float = 0.0
+    last_tok_t: float = 0.0
 
 
 class Engine:
@@ -51,8 +57,14 @@ class Engine:
         self.sched = RequestScheduler(n_slots)
         self.requests: Dict[int, Request] = {}
         self.pending: List[Request] = []
+        self._slot_req: Dict[int, Request] = {}
         self._next_rid = 0
         self._key = jax.random.PRNGKey(sampler.seed)
+        # per-engine telemetry: host-side only — the jitted prefill/decode
+        # functions are untouched, so enabling/disabling metrics never
+        # changes jit cache behavior
+        self.metrics = obs.Registry()
+        self._t_start = time.perf_counter()
 
         # pool caches: per-slot len vector
         self.caches = api.init_caches(cfg, n_slots, max_len)
@@ -100,9 +112,11 @@ class Engine:
     def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid=rid, prompt=list(prompt), max_new=max_new)
+        req = Request(rid=rid, prompt=list(prompt), max_new=max_new,
+                      submit_t=time.perf_counter())
         self.requests[rid] = req
         self.pending.append(req)
+        self.metrics.counter("serving.requests_submitted").inc()
         return rid
 
     def _write_slot(self, slot: int, one_caches, prompt_len: int):
@@ -141,9 +155,29 @@ class Engine:
 
     # ----------------------------------------------------------------- tick
 
+    def _finish(self, req: Request, reason: str) -> None:
+        req.done = True
+        req.finish_reason = reason
+        self.sched.retire(req.slot)
+        self.metrics.counter("serving.requests_completed").inc()
+        self.metrics.counter(f"serving.requests_completed.{reason}").inc()
+        if req.submit_t:
+            self.metrics.histogram("serving.request_latency_s").observe(
+                time.perf_counter() - req.submit_t)
+
     def step(self) -> int:
         """One engine tick: admit -> prefill -> decode.  Returns number of
-        tokens produced."""
+        tokens produced.
+
+        Token-count contract: `max_new` is the number of *decode* tokens
+        generated after prefill.  The prefill pass itself samples one
+        token (the first entry of `req.out`), so a request that never
+        hits EOS/max_len finishes with ``len(req.out) == max_new + 1``.
+        (Earlier revisions compared ``len(req.out) >= max_new`` which,
+        because the prefill token already counts toward ``req.out``,
+        ended one decode token early.)
+        """
+        m = self.metrics
         # 1. admission (slots are warps; wspawn)
         while self.pending:
             slot = self.sched.admit()
@@ -151,8 +185,10 @@ class Engine:
                 break
             req = self.pending.pop(0)
             req.slot = slot
-            self._slot_req = getattr(self, "_slot_req", {})
             self._slot_req[slot] = req
+        m.gauge("serving.queue_depth").set(len(self.pending))
+        m.gauge("serving.slot_occupancy").set(
+            float(self.sched.active.sum()) / self.n_slots)
 
         # 2. prefill stalled slots (memory-wait analogue)
         for slot in np.flatnonzero(self.sched.active & self.sched.stalled):
@@ -163,11 +199,19 @@ class Engine:
                 buck *= 2
             toks = np.zeros((1, buck), np.int32)
             toks[0, :L] = req.prompt
-            tok, one = self._prefill_fn(self.params, jnp.asarray(toks),
-                                        jnp.asarray([L], jnp.int32))
-            self._write_slot(int(slot), one, L)
-            self.last_tok[slot] = int(tok[0])
-            req.out.append(int(tok[0]))
+            with obs.trace.span("prefill", rid=req.rid, len=L, bucket=buck):
+                tok, one = self._prefill_fn(self.params, jnp.asarray(toks),
+                                            jnp.asarray([L], jnp.int32))
+                self._write_slot(int(slot), one, L)
+                t = int(tok[0])
+            now = time.perf_counter()
+            req.first_tok_t = req.last_tok_t = now
+            m.histogram("serving.ttft_s").observe(now - req.submit_t)
+            m.counter("serving.prefills").inc()
+            m.counter("serving.prompt_tokens").inc(L)
+            m.counter("serving.tokens").inc()
+            self.last_tok[slot] = t
+            req.out.append(t)
             self.lens[slot] = L
             self.sched.prefill_done(int(slot))
 
@@ -177,40 +221,59 @@ class Engine:
             return 0
         sel = np.zeros(self.n_slots, bool)
         sel[picked] = True
+        # decode-batch efficiency: selected / total lanes — every slot
+        # decodes (masked), only `picked` keep their result, exactly the
+        # SIMT lane-utilization analogue
+        m.counter("serving.decode_ticks").inc()
+        m.counter("serving.decode_lanes_selected").inc(len(picked))
+        m.counter("serving.decode_lanes_total").inc(self.n_slots)
+        m.gauge("serving.decode_batch_efficiency").set(
+            len(picked) / self.n_slots)
         # lanes not selected decode too (masked); their state is restored
         old_caches = self.caches
         self._key, k = jax.random.split(self._key)
         toks = jnp.asarray(self.last_tok)
-        new_tok, new_caches = self._decode_fn(self.params, self.caches,
-                                              toks, k)
-        selj = jnp.asarray(sel)
+        with obs.trace.span("decode_tick", n=len(picked)):
+            new_tok, new_caches = self._decode_fn(self.params, self.caches,
+                                                  toks, k)
+            selj = jnp.asarray(sel)
 
-        def keep(new, old, ax):
-            if ax is None or new.ndim == 0:
-                return new
-            shape = [1] * new.ndim
-            shape[ax] = self.n_slots
-            m = selj.reshape(shape)
-            return jnp.where(m, new, old)
+            def keep(new, old, ax):
+                if ax is None or new.ndim == 0:
+                    return new
+                shape = [1] * new.ndim
+                shape[ax] = self.n_slots
+                mask = selj.reshape(shape)
+                return jnp.where(mask, new, old)
 
-        self.caches = jax.tree.map(keep, new_caches, old_caches,
-                                   self._slot_ax)
-        self.caches["len"] = jnp.where(selj, new_caches["len"],
-                                       old_caches["len"])
+            self.caches = jax.tree.map(keep, new_caches, old_caches,
+                                       self._slot_ax)
+            self.caches["len"] = jnp.where(selj, new_caches["len"],
+                                           old_caches["len"])
+            toks_np = np.asarray(new_tok)
 
         produced = 0
-        toks_np = np.asarray(new_tok)
+        now = time.perf_counter()
         for slot in picked:
             req = self._slot_req[slot]
             t = int(toks_np[slot])
             req.out.append(t)
+            if req.last_tok_t:
+                m.histogram("serving.itl_s").observe(now - req.last_tok_t)
+            req.last_tok_t = now
             self.last_tok[slot] = t
             self.lens[slot] += 1
             produced += 1
-            if t == self.eos_id or len(req.out) >= req.max_new \
-                    or self.lens[slot] >= self.max_len - 1:
-                req.done = True
-                self.sched.retire(slot)
+            if t == self.eos_id:
+                self._finish(req, "eos")
+            elif len(req.out) - 1 >= req.max_new:     # prefill tok excluded
+                self._finish(req, "max_new")
+            elif self.lens[slot] >= self.max_len - 1:
+                self._finish(req, "max_len")
+        m.counter("serving.tokens").inc(produced)
+        m.gauge("serving.tokens_per_s").set(
+            m.counter("serving.tokens").value
+            / max(time.perf_counter() - self._t_start, 1e-9))
         return produced
 
     def run(self, max_ticks: int = 1000) -> None:
@@ -222,6 +285,10 @@ class Engine:
 
     def results(self) -> Dict[int, List[int]]:
         return {rid: r.out for rid, r in self.requests.items()}
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable summary of every serving instrument."""
+        return self.metrics.snapshot()
 
 
 def _slot_axis(arr, n_slots: int) -> Optional[int]:

@@ -132,3 +132,31 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, *, tp: int = 1,
 
 def donate_argnums_for_train_step() -> Tuple[int, ...]:
     return (0,)     # state buffers are donated; batch is not
+
+
+# ---------------------------------------------------------------------------
+# telemetry (host-side, after the jitted step — never traced)
+# ---------------------------------------------------------------------------
+
+def record_step_metrics(registry, metrics: Dict[str, Any], *,
+                        tokens: int, dt: float,
+                        step: Optional[int] = None) -> None:
+    """Fold one train step's outputs into an obs registry.
+
+    `metrics` is the dict returned by the jitted train step (loss/ce/aux
+    from the loss, grad_norm/lr from the optimizer).  Pulling values to
+    host here forces a sync, so call it at your logging cadence, not
+    necessarily every step.
+    """
+    registry.gauge("train.loss").set(float(metrics["loss"]))
+    registry.gauge("train.ce").set(float(metrics["ce"]))
+    if "grad_norm" in metrics:
+        registry.gauge("train.grad_norm").set(float(metrics["grad_norm"]))
+    if "lr" in metrics:
+        registry.gauge("train.lr").set(float(metrics["lr"]))
+    registry.histogram("train.step_time_s").observe(dt)
+    registry.counter("train.steps").inc()
+    registry.counter("train.tokens").inc(tokens)
+    registry.gauge("train.tokens_per_s").set(tokens / max(dt, 1e-9))
+    if step is not None:
+        registry.gauge("train.step").set(step)

@@ -35,8 +35,9 @@ def test_engine_matches_sequential_reference():
     rids = [eng.submit(p, max_new=5) for p in prompts]
     eng.run()
     res = eng.results()
+    # max_new counts decode tokens; prefill contributes one more
     for rid, p in zip(rids, prompts):
-        assert res[rid] == ref_decode(p, 5), (rid, p)
+        assert res[rid] == ref_decode(p, 6), (rid, p)
 
 
 def test_slot_recycling_more_requests_than_slots():
@@ -47,7 +48,36 @@ def test_slot_recycling_more_requests_than_slots():
     eng.run()
     res = eng.results()
     for rid, p in zip(rids, prompts):
-        assert res[rid] == ref_decode(p, 3), (rid, p)
+        assert res[rid] == ref_decode(p, 4), (rid, p)
+
+
+def test_max_new_contract_and_finish_reason():
+    """`max_new` = decode tokens after prefill, so a request that never
+    hits EOS finishes with max_new + 1 output tokens, and the completion
+    counters record the finish reason."""
+    eng = Engine(CFG, PARAMS, n_slots=2, max_len=64, prompt_bucket=8,
+                 eos_id=-1)
+    rid = eng.submit([5, 9, 2], max_new=4)
+    eng.run()
+    req = eng.requests[rid]
+    assert len(req.out) == 5
+    assert req.finish_reason == "max_new"
+    snap = eng.metrics_snapshot()
+    assert snap["serving.requests_completed"]["value"] == 1
+    assert snap["serving.requests_completed.max_new"]["value"] == 1
+    assert snap["serving.ttft_s"]["count"] == 1
+    assert snap["serving.itl_s"]["count"] == 4
+    assert snap["serving.tokens"]["value"] == 5
+
+
+def test_results_before_any_admission():
+    """_slot_req is initialized in __init__, so results()/step() on an
+    engine that never admitted anything cannot raise AttributeError."""
+    eng = Engine(CFG, PARAMS, n_slots=2, max_len=64, prompt_bucket=8,
+                 eos_id=-1)
+    assert eng._slot_req == {}
+    assert eng.results() == {}
+    assert eng.step() == 0
 
 
 def test_scheduler_no_duplicate_issue_per_tick():
