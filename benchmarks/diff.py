@@ -1,0 +1,156 @@
+"""Benchmark regression gate: diff current BENCH_*.json artifacts
+against the committed baselines in `benchmarks/baselines/`.
+
+    PYTHONPATH=src python -m benchmarks.diff \
+        --baseline-dir benchmarks/baselines --current-dir bench_out
+
+Exit status is the contract (CI's bench-gate job fails on non-zero):
+0 = every gated metric within tolerance, 1 = at least one regression,
+2 = a gated artifact is missing from the current run.
+
+Gated artifacts and how their metrics are extracted:
+
+  BENCH_fig9_rodinia.json   one metric per (bench, config): the SIMT
+                            cycle count ("vecadd/2w2t/cycles"), lower is
+                            better, default 10% tolerance.  Cycles are
+                            deterministic, so the tolerance only absorbs
+                            intentional model changes small enough to be
+                            noise at paper scale.
+  BENCH_serving.json        the artifact's own "gate" section: each
+                            entry is {value, better, tol} — tolerances
+                            travel WITH the baseline so wall-clock
+                            ratios can be generous (CI machines are
+                            noisy) while deterministic counters pin
+                            exact (tol 0).
+
+A metric present only in the baseline (or only in the current run) is a
+failure: silently dropping a gated metric is how regressions sneak in.
+Improvements are reported but never fail the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+FIG9_TOL = 0.10
+EPS = 1e-9
+
+# (file, extractor) — extractors map (baseline_doc, current_doc) to
+# {metric: (base_value, cur_value_or_None, better, tol)}
+GATED_FILES = ("BENCH_fig9_rodinia.json", "BENCH_serving.json")
+
+
+def _extract_fig9(base: dict, cur: dict) -> Dict[str, tuple]:
+    out = {}
+    for key, rec in base.items():
+        cval = cur.get(key, {}).get("stats", {}).get("cycles")
+        out[f"{key}/cycles"] = (float(rec["stats"]["cycles"]),
+                                None if cval is None else float(cval),
+                                "lower", FIG9_TOL)
+    return out
+
+
+def _extract_serving(base: dict, cur: dict) -> Dict[str, tuple]:
+    out = {}
+    for name, spec in base.get("gate", {}).items():
+        cspec = cur.get("gate", {}).get(name)
+        cval = None if cspec is None else float(cspec["value"])
+        out[name] = (float(spec["value"]), cval,
+                     spec.get("better", "lower"), float(spec.get("tol", 0)))
+    return out
+
+
+EXTRACTORS = {
+    "BENCH_fig9_rodinia.json": _extract_fig9,
+    "BENCH_serving.json": _extract_serving,
+}
+
+
+def check_metric(base: float, cur: float, better: str,
+                 tol: float) -> Tuple[bool, float]:
+    """-> (ok, relative_delta).  `tol` is relative to the baseline; a
+    zero baseline degenerates to an absolute tolerance so exact-pinned
+    counters (tol 0) still compare sensibly."""
+    delta = (cur - base) / base if base else (cur - base)
+    if better == "higher":
+        bound = base * (1.0 - tol) if base else -tol
+        return cur >= bound - EPS, delta
+    bound = base * (1.0 + tol) if base else tol
+    return cur <= bound + EPS, delta
+
+
+def diff_file(fname: str, baseline_dir: str,
+              current_dir: str) -> Tuple[List[str], List[str]]:
+    """-> (failure_lines, report_lines) for one gated artifact."""
+    bpath = os.path.join(baseline_dir, fname)
+    cpath = os.path.join(current_dir, fname)
+    if not os.path.exists(bpath):
+        return [], [f"{fname}: no committed baseline, skipping"]
+    if not os.path.exists(cpath):
+        return [f"{fname}: artifact missing from {current_dir}/ "
+                "(did the benchmark section run?)"], []
+    with open(bpath) as f:
+        base = json.load(f)
+    with open(cpath) as f:
+        cur = json.load(f)
+    failures: List[str] = []
+    report: List[str] = []
+    metrics = EXTRACTORS[fname](base, cur)
+    for name, (bval, cval, better, tol) in sorted(metrics.items()):
+        if cval is None:
+            failures.append(f"{fname}:{name}: metric missing from "
+                            "current artifact")
+            continue
+        ok, delta = check_metric(bval, cval, better, tol)
+        line = (f"{fname}:{name}: base={bval:g} cur={cval:g} "
+                f"({delta:+.1%}, {better} is better, tol {tol:.0%})")
+        if ok:
+            report.append("  ok   " + line)
+        else:
+            failures.append(line)
+    extra = set(EXTRACTORS[fname](cur, cur)) - set(metrics)
+    for name in sorted(extra):
+        report.append(f"  new  {fname}:{name}: not in baseline "
+                      "(refresh benchmarks/baselines/ to gate it)")
+    return failures, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(here, "baselines"))
+    ap.add_argument("--current-dir",
+                    default=os.environ.get("REPRO_BENCH_OUT", "bench_out"))
+    ap.add_argument("--files", default=",".join(GATED_FILES),
+                    help="comma-separated subset of gated artifacts")
+    args = ap.parse_args(argv)
+
+    missing_artifact = False
+    all_failures: List[str] = []
+    for fname in [f for f in args.files.split(",") if f]:
+        if fname not in EXTRACTORS:
+            ap.error(f"unknown gated file {fname!r} "
+                     f"(choose from {GATED_FILES})")
+        failures, report = diff_file(fname, args.baseline_dir,
+                                     args.current_dir)
+        for line in report:
+            print(line)
+        for line in failures:
+            print("  FAIL " + line)
+            missing_artifact |= "artifact missing" in line
+        all_failures += failures
+
+    if all_failures:
+        print(f"\nbench-gate: {len(all_failures)} regression(s) vs "
+              f"{args.baseline_dir}/")
+        return 2 if missing_artifact else 1
+    print("\nbench-gate: all gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

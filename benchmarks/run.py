@@ -1,67 +1,97 @@
 """Benchmark entry point: one section per paper table/figure + the
-roofline table.  `PYTHONPATH=src python -m benchmarks.run`
+roofline table + the serving benchmark.
+
+    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --sections fig9_rodinia,serving
 
 Every run also emits machine-readable artifacts (so the perf trajectory
 is tracked across PRs) into `--out-dir` (default `bench_out/`, override
 with REPRO_BENCH_OUT):
 
   BENCH_fig9_rodinia.json   per-(bench, config) SIMT stats + PerfReports
+  BENCH_serving.json        chunked-prefill / prefix-cache serving gate
   BENCH_run.json            section wall times + global metrics snapshot
   run.trace.json            Chrome/Perfetto trace of the whole run
+
+CI's bench-gate job runs the fig9_rodinia and serving sections and diffs
+their artifacts against benchmarks/baselines/ via `benchmarks.diff`.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import sys
 import time
 
 from repro import obs
+
+SECTIONS = ("fig8_dse", "fig9_rodinia", "fig10_power", "roofline_table",
+            "serving")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir",
                     default=os.environ.get("REPRO_BENCH_OUT", "bench_out"))
+    ap.add_argument("--sections", default=",".join(SECTIONS),
+                    help="comma-separated subset of: " + ",".join(SECTIONS))
     args = ap.parse_args(argv)
+    sections = [s for s in args.sections.split(",") if s]
+    unknown = sorted(set(sections) - set(SECTIONS))
+    if unknown:
+        ap.error(f"unknown sections: {unknown} (choose from {SECTIONS})")
     os.makedirs(args.out_dir, exist_ok=True)
     obs.enable_tracing()
 
     t0 = time.time()
     section_s = {}
 
-    print("==== Fig 8: area/power design-space (synthesis model) ====")
-    with obs.trace.span("fig8_dse"):
-        ts = time.time()
+    def run_section(name, fn):
+        if name not in sections:
+            return
+        with obs.trace.span(name):
+            ts = time.time()
+            fn()
+            section_s[name] = time.time() - ts
+
+    def fig8():
+        print("==== Fig 8: area/power design-space (synthesis model) ====")
         from benchmarks import fig8_dse
         fig8_dse.main()
-        section_s["fig8_dse"] = time.time() - ts
 
-    print("\n==== Fig 9: Rodinia cycles over (warps x threads) ====")
-    with obs.trace.span("fig9_rodinia"):
-        ts = time.time()
+    fig9_stats = {}
+
+    def fig9():
+        print("\n==== Fig 9: Rodinia cycles over (warps x threads) ====")
         from benchmarks import fig9_rodinia
         stats = fig9_rodinia.run_all()
         fig9_rodinia.print_table(stats)
-        section_s["fig9_rodinia"] = time.time() - ts
-    with open(os.path.join(args.out_dir, "BENCH_fig9_rodinia.json"),
-              "w") as f:
-        json.dump(fig9_rodinia.results_doc(stats), f, indent=1)
+        fig9_stats["stats"] = stats
+        with open(os.path.join(args.out_dir, "BENCH_fig9_rodinia.json"),
+                  "w") as f:
+            json.dump(fig9_rodinia.results_doc(stats), f, indent=1)
 
-    print("\n==== Fig 10: power efficiency ====")
-    with obs.trace.span("fig10_power"):
-        ts = time.time()
+    def fig10():
+        print("\n==== Fig 10: power efficiency ====")
         from benchmarks import fig10_power
-        fig10_power.main(stats=stats)
-        section_s["fig10_power"] = time.time() - ts
+        # reuses fig9 stats when that section ran, recomputes otherwise
+        fig10_power.main(stats=fig9_stats.get("stats"))
 
-    print("\n==== Roofline table (from dry-run artifacts) ====")
-    with obs.trace.span("roofline_table"):
-        ts = time.time()
+    def roofline():
+        print("\n==== Roofline table (from dry-run artifacts) ====")
         from benchmarks import roofline_table
         roofline_table.main()
-        section_s["roofline_table"] = time.time() - ts
+
+    def serving():
+        print("\n==== Serving: chunked prefill + prefix cache ====")
+        from benchmarks import serving as serving_bench
+        serving_bench.main(out_dir=args.out_dir)
+
+    run_section("fig8_dse", fig8)
+    run_section("fig9_rodinia", fig9)
+    run_section("fig10_power", fig10)
+    run_section("roofline_table", roofline)
+    run_section("serving", serving)
 
     wall = time.time() - t0
     with open(os.path.join(args.out_dir, "BENCH_run.json"), "w") as f:

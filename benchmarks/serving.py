@@ -1,0 +1,180 @@
+"""Serving benchmark: chunked-batch prefill + prefix cache vs the
+legacy per-request bucketed prefill.
+
+Two workloads over a tiny reduced config (CI-sized, CPU-friendly):
+
+  shared_prefix  16 requests sharing a common 128-token system-prompt
+                 prefix (32-token unique tails) — the prefix-cache win.
+  cold           16 requests with unrelated 160-token prompts — the
+                 chunked/batched-admission win only.
+
+Each workload runs once per prefill mode on a pre-warmed engine (one
+warmup request absorbs jit compiles, and — for shared_prefix — seeds
+the prefix cache, i.e. the shared-system-prompt steady state).  Emits
+``BENCH_serving.json``: raw per-mode latencies under "workloads", plus
+a machine-portable "gate" section (deterministic counters + wall-clock
+*ratios*) that ``benchmarks/diff.py`` checks against the committed
+baseline in CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+PREFIX_LEN = 128
+TAIL_LEN = 32
+N_REQUESTS = 16
+N_SLOTS = 8
+CHUNK = 32
+MAX_LEN = 256
+MAX_NEW = 4
+SEED = 0
+
+
+def _build():
+    from repro.configs import reduced_config
+    from repro.models import api
+    cfg = reduced_config("phi3-mini-3.8b").replace(num_layers=2)
+    params = api.build_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, mode: str):
+    from repro.serving.engine import Engine
+    return Engine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                  prompt_bucket=64, prefill_chunk=CHUNK, prefill_mode=mode,
+                  prefix_cache_entries=64, eos_id=-1)
+
+
+def make_workloads(seed: int = SEED) -> Dict[str, Dict[str, List[List[int]]]]:
+    """{workload: {"warmup": prompt, "prompts": [prompt, ...]}}."""
+    rng = np.random.default_rng(seed)
+    vocab = 512                       # reduced-config vocab size
+    prefix = rng.integers(0, vocab, PREFIX_LEN).tolist()
+    shared = [prefix + rng.integers(0, vocab, TAIL_LEN).tolist()
+              for _ in range(N_REQUESTS)]
+    cold = [rng.integers(0, vocab, PREFIX_LEN + TAIL_LEN).tolist()
+            for _ in range(N_REQUESTS)]
+    return {
+        # warmup shares the prefix -> seeds the prefix cache AND compiles
+        "shared_prefix": {
+            "warmup": prefix + rng.integers(0, vocab, TAIL_LEN).tolist(),
+            "prompts": shared,
+        },
+        # warmup is unrelated -> compiles only, every chunk is a miss
+        "cold": {
+            "warmup": rng.integers(0, vocab, PREFIX_LEN + TAIL_LEN).tolist(),
+            "prompts": cold,
+        },
+    }
+
+
+def run_workload(eng, warmup: List[int], prompts: List[List[int]]) -> dict:
+    # two warmup requests: the first absorbs the forward-pass compiles
+    # (and seeds the prefix cache), the second exercises the prefix-HIT
+    # admission path so its copy kernel is compiled too — the measured
+    # region is the shared-system-prompt steady state
+    for _ in range(2):
+        eng.submit(warmup, max_new=2)
+        eng.run()
+    t0 = time.perf_counter()
+    rids = [eng.submit(p, max_new=MAX_NEW) for p in prompts]
+    eng.run()
+    wall = time.perf_counter() - t0
+    ttfts = sorted(eng.requests[r].first_tok_t - eng.requests[r].submit_t
+                   for r in rids)
+    tokens = sum(len(eng.requests[r].out) for r in rids)
+    return {
+        "requests": len(rids),
+        "tokens": tokens,
+        "wall_s": wall,
+        "tokens_per_s": tokens / max(wall, 1e-9),
+        "ttft_mean_s": float(np.mean(ttfts)),
+        "ttft_p50_s": ttfts[len(ttfts) // 2],
+        "ttft_max_s": ttfts[-1],
+    }
+
+
+def run_all() -> dict:
+    cfg, params = _build()
+    doc: dict = {
+        "config": {"arch": "phi3-mini-3.8b/reduced-2L", "slots": N_SLOTS,
+                   "chunk": CHUNK, "max_len": MAX_LEN, "max_new": MAX_NEW,
+                   "requests": N_REQUESTS, "prefix_len": PREFIX_LEN,
+                   "tail_len": TAIL_LEN, "seed": SEED},
+        "workloads": {},
+    }
+    snapshots = {}
+    for wname, wl in make_workloads().items():
+        per_mode = {}
+        for mode in ("legacy", "chunked"):
+            eng = _engine(cfg, params, mode)
+            per_mode[mode] = run_workload(eng, wl["warmup"], wl["prompts"])
+            snapshots[(wname, mode)] = eng.metrics_snapshot()
+        per_mode["ttft_speedup"] = (per_mode["legacy"]["ttft_mean_s"]
+                                    / max(per_mode["chunked"]["ttft_mean_s"],
+                                          1e-9))
+        per_mode["tokens_per_s_ratio"] = (
+            per_mode["chunked"]["tokens_per_s"]
+            / max(per_mode["legacy"]["tokens_per_s"], 1e-9))
+        doc["workloads"][wname] = per_mode
+
+    def ctr(wname, name):
+        return snapshots[(wname, "chunked")].get(name, {}).get("value", 0)
+
+    # gate metrics: deterministic counters (exact) + wall-clock ratios
+    # (generous tolerances — CI machines are noisy, ratios less so)
+    doc["gate"] = {
+        "shared_prefix_ttft_speedup": {
+            "value": doc["workloads"]["shared_prefix"]["ttft_speedup"],
+            "better": "higher", "tol": 0.5},
+        "cold_ttft_speedup": {
+            "value": doc["workloads"]["cold"]["ttft_speedup"],
+            "better": "higher", "tol": 0.5},
+        "shared_prefix_cache_hit_chunks": {
+            "value": ctr("shared_prefix", "serving.prefix_cache.hits"),
+            "better": "higher", "tol": 0.0},
+        "shared_prefix_prefill_chunks": {
+            "value": ctr("shared_prefix", "serving.prefill_chunks"),
+            "better": "lower", "tol": 0.0},
+        "chunked_prefill_recompiles": {
+            "value": ctr("shared_prefix", "serving.recompiles.prefill_chunk"),
+            "better": "lower", "tol": 0.0},
+    }
+    doc["metrics"] = {f"{w}/{m}": snap
+                      for (w, m), snap in snapshots.items()}
+    return doc
+
+
+def print_table(doc: dict) -> None:
+    print("workload,mode,ttft_mean_s,ttft_max_s,tokens_per_s")
+    for wname, per_mode in doc["workloads"].items():
+        for mode in ("legacy", "chunked"):
+            r = per_mode[mode]
+            print(f"{wname},{mode},{r['ttft_mean_s']:.4f},"
+                  f"{r['ttft_max_s']:.4f},{r['tokens_per_s']:.1f}")
+        print(f"# {wname}: ttft speedup {per_mode['ttft_speedup']:.2f}x, "
+              f"throughput ratio {per_mode['tokens_per_s_ratio']:.2f}x")
+
+
+def main(out_dir=None) -> dict:
+    out_dir = out_dir or os.environ.get("REPRO_BENCH_OUT", "bench_out")
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    doc = run_all()
+    print_table(doc)
+    path = os.path.join(out_dir, "BENCH_serving.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# artifacts: {path}")
+    print(f"# serving wall time {time.time()-t0:.0f}s")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

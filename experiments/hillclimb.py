@@ -11,7 +11,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import json      # noqa: E402
 import sys       # noqa: E402
-import time      # noqa: E402
 
 
 def run(arch: str, tag: str, knobs: dict):

@@ -22,7 +22,7 @@ axis, global barrier = the pod axis — the MSB-of-barID distinction).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,7 @@ float math.  CSRs expose the SIMT geometry exactly like the Vortex runtime
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 # ---------------------------------------------------------------------------
 # major opcodes

@@ -9,7 +9,7 @@ A real corpus reader would implement the same `Source` protocol.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator
 
 import jax
 import jax.numpy as jnp

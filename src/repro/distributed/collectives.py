@@ -6,7 +6,6 @@ give the shard_map code paths the same structure explicitly.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

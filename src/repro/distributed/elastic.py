@@ -20,8 +20,7 @@ reschedules work exactly like the 4-mask warp scheduler (§IV-B).
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

@@ -10,7 +10,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro import obs
 from repro.kernels.flash_attention.kernel import flash_attention_fwd

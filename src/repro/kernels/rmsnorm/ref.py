@@ -1,7 +1,6 @@
 """Oracle: the model-path RMSNorm (fp32 statistics)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.models.common import rmsnorm
 

@@ -12,7 +12,6 @@ The inter-chunk recurrence (tiny, sequential over nc) stays in jnp.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

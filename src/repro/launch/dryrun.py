@@ -20,7 +20,6 @@ import sys          # noqa: E402
 import time         # noqa: E402
 import traceback    # noqa: E402
 
-import jax          # noqa: E402
 
 from repro.configs import ARCH_IDS, applicable_shapes, get_config  # noqa: E402
 from repro.launch import cells as cells_mod                        # noqa: E402

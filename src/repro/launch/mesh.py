@@ -13,7 +13,7 @@ change and checkpoints are mesh-agnostic (checkpoint/store.py).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh

@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
         --reduced --requests 8 --max-new 16
+
+Chunked-prefill / prefix-cache knobs (see src/repro/serving/README.md):
+`--prefill-chunk`, `--prefill-mode`, `--prefix-cache-entries`,
+`--shared-prefix` (prepends a common system-prompt prefix to every
+request so the prefix cache has something to hit).
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config, reduced_config
 from repro.models import api
 from repro.serving.engine import Engine
@@ -28,20 +34,36 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked-prefill chunk size (tokens)")
+    ap.add_argument("--prefill-mode", default="auto",
+                    choices=["auto", "chunked", "legacy"])
+    ap.add_argument("--prefix-cache-entries", type=int, default=32,
+                    help="LRU capacity of the KV prefix cache; 0 disables")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend a common N-token prefix to every request")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of the run here")
     args = ap.parse_args(argv)
 
+    if args.trace:
+        obs.enable_tracing()
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     params = api.build_params(jax.random.PRNGKey(0), cfg)
     eng = Engine(cfg, params, n_slots=args.slots, max_len=args.max_len,
                  sampler=SamplerConfig(temperature=args.temperature,
                                        seed=args.seed),
-                 eos_id=-1)
+                 eos_id=-1,
+                 prefill_chunk=args.prefill_chunk,
+                 prefill_mode=args.prefill_mode,
+                 prefix_cache_entries=args.prefix_cache_entries)
 
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size, args.shared_prefix).tolist()
     t0 = time.time()
-    for i in range(args.requests):
+    for _ in range(args.requests):
         plen = int(rng.integers(2, 12))
-        prompt = rng.integers(0, cfg.vocab_size, plen).tolist()
+        prompt = shared + rng.integers(0, cfg.vocab_size, plen).tolist()
         eng.submit(prompt, max_new=args.max_new)
     eng.run()
     dt = time.time() - t0
@@ -50,7 +72,17 @@ def main(argv=None) -> int:
     for rid, toks in sorted(res.items()):
         print(f"req {rid:3d}: {len(toks)} tokens  {toks[:8]}...", flush=True)
     print(f"[served] {len(res)} requests, {total} tokens in {dt:.1f}s "
-          f"({total/dt:.1f} tok/s)", flush=True)
+          f"({total/dt:.1f} tok/s)  prefill={eng.prefill_mode}", flush=True)
+    snap = eng.metrics_snapshot()
+    for key in ("serving.prefix_cache.hits", "serving.prefix_cache.misses",
+                "serving.prefix_cache.evictions", "serving.prefill_chunks",
+                "serving.recompiles.prefill",
+                "serving.recompiles.prefill_chunk"):
+        if key in snap:
+            print(f"  {key}: {snap[key].get('value')}", flush=True)
+    if args.trace:
+        obs.write_chrome_trace(args.trace, obs.tracer.drain())
+        print(f"[trace] wrote {args.trace}", flush=True)
     return 0
 
 

@@ -18,16 +18,14 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import obs
 from repro.checkpoint.manager import CheckpointManager
-from repro.configs import SHAPES_BY_NAME, TrainConfig, get_config, reduced_config
+from repro.configs import TrainConfig, get_config, reduced_config
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import Loader, SyntheticLM
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_test_mesh
-from repro.models import api
 from repro.training import loop as tl
 
 

@@ -19,7 +19,7 @@ precomputed patch embeddings (vlm) / frame embeddings (audio) directly.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +61,15 @@ def forward(params, batch: Dict[str, Any], cfg: ModelConfig, *,
             tp: int = 1, mode: str = "train",
             caches: Optional[Dict[str, Any]] = None, remat: str = "full",
             long_context: bool = False):
-    """Returns (logits, aux_loss, new_caches)."""
+    """Returns (logits, aux_loss, new_caches).
+
+    mode 'chunk' (chunked prefill: append S tokens into an existing cache
+    at its ragged per-slot offset) is only implemented for the
+    transformer families — gate on `supports_chunked_prefill`.
+    """
+    if mode == "chunk" and not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"chunked prefill is not supported for family {cfg.family!r}")
     if cfg.family == "hybrid":
         wo = ZAMBA_LONG_WINDOW if long_context else None
         return zamba.zamba_forward(params, batch, cfg, tp=tp, mode=mode,
@@ -75,6 +83,16 @@ def forward(params, batch: Dict[str, Any], cfg: ModelConfig, *,
                                        caches=caches, remat=remat)
     return transformer.lm_forward(params, batch, cfg, tp=tp, mode=mode,
                                   caches=caches, remat=remat)
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """True when `forward(..., mode="chunk")` works for this config: the
+    transformer KV-cache families whose decode state is a positional KV
+    cache a chunk can be appended into.  Recurrent-state families
+    (hybrid/xlstm) and the stub-frontend families (vlm/audio, whose
+    prefill needs precomputed embeddings) fall back to bucketed prefill
+    in the serving engine."""
+    return cfg.family in ("dense", "moe")
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int, *, tp: int = 1,

@@ -329,6 +329,53 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
     return out.reshape(B, 1, Hq, D).astype(q.dtype)
 
 
+def chunk_attention(q, k_cache, v_cache, cache_len, *,
+                    window: Optional[int] = None) -> jax.Array:
+    """Chunk-append attention for chunked prefill.
+
+    q: [B,C,Hq,D] — C new query positions appended after `cache_len`
+    tokens already in the cache; caches: [B,Smax,KV,D]; cache_len: [B]
+    (or scalar) length *before* this chunk.  Query i (0-based within the
+    chunk) sits at absolute position cache_len + i and attends causally
+    over cache[0 : cache_len + i + 1].  Ring (windowed, Smax == window)
+    caches are not supported — callers gate on layout (the serving
+    engine falls back to bucketed prefill for ring caches)."""
+    B, C, Hq, D = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // KV
+    scale = 1.0 / (D ** 0.5)
+    lens = jnp.broadcast_to(cache_len, (B,))
+    qg = q.reshape(B, C, KV, G, D)
+    s = jnp.einsum("bckgd,bskd->bckgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(Smax)
+    # end[b, c] = absolute position of chunk-query c, exclusive bound
+    end = lens[:, None] + jnp.arange(C)[None, :] + 1        # [B, C]
+    valid = pos[None, None] < end[..., None]                # [B, C, Smax]
+    if window is not None:
+        valid &= pos[None, None] >= (end - window)[..., None]
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bckgs,bskd->bckgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, C, Hq, D).astype(q.dtype)
+
+
+def chunk_cache_update(k_cache, v_cache, k_new, v_new, cache_len):
+    """Insert a C-token chunk ([B,C,...]) at per-slot offset `cache_len`
+    (no ring support — see chunk_attention).  Callers must guarantee
+    cache_len + C <= Smax per slot (dynamic_update_slice clamps the
+    start index, which would silently corrupt earlier positions)."""
+    B = k_cache.shape[0]
+    lens = jnp.broadcast_to(cache_len, (B,))
+
+    def put(cache, new):
+        return jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), i, axis=0))(cache, new, lens)
+
+    return put(k_cache, k_new), put(v_cache, v_new)
+
+
 def cache_update(k_cache, v_cache, k_new, v_new, cache_len,
                  window: Optional[int] = None):
     """Insert one position ([B,1,...]) at cache_len (ring write if
@@ -433,7 +480,19 @@ def attn_forward(p: Dict[str, Any], x: jax.Array, positions: jax.Array, *,
             q = common.apply_rope(q, positions, cfg.rope_theta)
 
     new_cache = cache
-    if mode == "decode" and kv_override is None:
+    if mode == "chunk":
+        # chunk-append prefill: write S new positions at the ragged
+        # per-slot offset, attend over the whole (masked) cache.  The
+        # int8 cache layout is decode-only; the serving engine gates
+        # chunked prefill on an unquantized, non-ring cache.
+        assert cache is not None and kv_override is None
+        assert "k_scale" not in cache, \
+            "chunked prefill does not support int8 KV caches"
+        kc, vc = chunk_cache_update(cache["k"], cache["v"], k, v,
+                                    cache["len"])
+        out = chunk_attention(q, kc, vc, cache["len"], window=wdw)
+        new_cache = {"k": kc, "v": vc, "len": cache["len"] + S}
+    elif mode == "decode" and kv_override is None:
         assert cache is not None
         if "k_scale" in cache:                      # int8-quantized cache
             kq, ks_ = _quantize_kv(k)

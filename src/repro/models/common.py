@@ -8,7 +8,7 @@ functions; ``repro.distributed.sharding`` maps logical names onto the mesh.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,7 @@ prefix stage and the main stage.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -135,8 +134,9 @@ def _scan_stage(x, stage_params, positions, *, cfg, tp, mode, kind,
     slices with dynamic_update_index_in_dim — XLA aliases the carry in
     place.  (Passing caches as xs/ys allocates a second full cache in
     temps: +2x cache bytes per device, observed 16.6 GB on phi3
-    decode_32k.)"""
-    if mode == "decode" and caches is not None:
+    decode_32k.)  Chunked prefill ('chunk') appends S positions into the
+    same carried pool cache at the ragged per-slot offset."""
+    if mode in ("decode", "chunk") and caches is not None:
         kv = {k: v for k, v in caches.items() if k != "len"}
         lens = caches["len"]          # scalar or [B] (ragged serving)
 
@@ -180,17 +180,22 @@ def lm_forward(params: Dict[str, Any], batch: Dict[str, Any],
 
     batch: {"tokens": [B,St]} (+ "patch_embeds": [B,P,d] for VLM prefill/train)
     mode 'decode': tokens is [B,1]; caches required; positions from cache len.
+    mode 'chunk':  tokens is [B,C]; caches required; chunk-append prefill —
+    position of token i is caches["len"] + i (ragged per-slot lens).
     """
     tokens = batch["tokens"]
     B = tokens.shape[0]
     x = jnp.take(params["embed"], tokens, axis=0)
-    if cfg.family == "vlm" and mode != "decode":
+    if cfg.family == "vlm" and mode not in ("decode", "chunk"):
         patches = batch["patch_embeds"].astype(x.dtype)
         x = jnp.concatenate([patches, x], axis=1)
     S = x.shape[1]
 
     if mode == "decode":
         positions = jnp.broadcast_to(caches["len"], (B,)).reshape(B, 1)
+    elif mode == "chunk":
+        lens = jnp.broadcast_to(caches["len"], (B,))
+        positions = lens[:, None] + jnp.arange(S)[None, :]
     else:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     x = constrain(x, ("batch", None, "act_embed"))
@@ -207,12 +212,12 @@ def lm_forward(params: Dict[str, Any], batch: Dict[str, Any],
                                  mode=mode, kind=kind, caches=stage_caches,
                                  remat=remat)
         aux_total = aux_total + aux
-        if nc is not None and mode in ("prefill", "decode"):
+        if nc is not None and mode in ("prefill", "decode", "chunk"):
             new_caches[name] = {k: v for k, v in nc.items() if k != "len"}
-    if mode in ("prefill", "decode"):
+    if mode in ("prefill", "decode", "chunk"):
         prev_len = jnp.int32(0) if caches is None else caches["len"]
-        new_caches["len"] = prev_len + (jnp.int32(S) if mode == "prefill"
-                                        else jnp.int32(1))
+        new_caches["len"] = prev_len + (jnp.int32(1) if mode == "decode"
+                                        else jnp.int32(S))
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])

@@ -18,7 +18,7 @@ from __future__ import annotations
 import functools
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 __all__ = ["Span", "Tracer", "tracer", "trace"]
 

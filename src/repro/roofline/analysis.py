@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 from repro.roofline.hw import Chip, DTYPE_BYTES, V5E
 

@@ -16,12 +16,11 @@ All return (LaunchResult, ok: bool).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import numpy as np
 
 from repro.core.simt.machine import MachineConfig
-from repro.runtime import spawn
 from repro.runtime.spawn import (ARG_BASE, Allocator, LaunchResult,
                                  f32_bits, pocl_spawn, raw_spawn)
 

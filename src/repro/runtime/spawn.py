@@ -24,7 +24,7 @@ ABI for kernel bodies (asm text fragments):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 

@@ -1,10 +1,23 @@
 """Serving engine: continuous batching over a slotted KV-cache pool.
 
-One jitted prefill function (per prompt bucket) + one jitted decode
-function over the whole pool; the RequestScheduler (the Vortex 4-mask
-warp scheduler over request slots) decides which slots advance each tick.
-Slots not selected keep their state — the decode runs the full pool with
-a lane mask, exactly how a thread mask predicates lanes.
+Decode: one jitted step over the whole pool; the RequestScheduler (the
+Vortex 4-mask warp scheduler over request slots) decides which slots
+advance each tick.  Slots not selected keep their state — the decode
+runs the full pool with a lane mask, exactly how a thread mask
+predicates lanes.
+
+Prefill (the stalled-warp fill path) is **chunked and batched**:
+prompts stream into the decode pool's caches in fixed-size chunks
+through ONE jitted chunk function — no per-bucket recompiles, long
+prompts interleave with decode ticks instead of head-of-line blocking
+them, and every stalled slot advances in the same batched call.  A
+chunk-hash **prefix cache** (serving/prefix_cache.py) short-circuits
+shared prompt prefixes entirely: matching KV prefixes are copied from a
+bounded LRU pool into the slot via `_write_slot`, no forward pass at
+all.  Families without a chunk-appendable cache (recurrent state, stub
+frontends, ring windows) fall back to the legacy per-request bucketed
+prefill (`prefill_mode="legacy"`), which is also the baseline the
+serving benchmark measures speedups against.
 
 Ragged lengths: the cache pool's `len` is a per-slot [B] vector (see
 models/attention.py decode path).
@@ -13,7 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +36,8 @@ import numpy as np
 from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import api
-from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.sampler import SamplerConfig, logit_entropy, sample
 from repro.serving.scheduler import RequestScheduler
 
 
@@ -45,7 +60,14 @@ class Engine:
                  max_len: int = 512, prompt_bucket: int = 64,
                  decode_width: Optional[int] = None,
                  sampler: SamplerConfig = SamplerConfig(),
-                 eos_id: int = 1):
+                 eos_id: int = 1,
+                 prefill_chunk: int = 32,
+                 prefill_mode: str = "auto",
+                 prefix_cache_entries: int = 32):
+        """prefill_mode: 'chunked' | 'legacy' | 'auto' (chunked when the
+        model family supports chunk-append cache writes and the cache
+        layout is non-ring).  prefix_cache_entries bounds the LRU pool
+        of KV prefix snapshots; 0 disables prefix caching entirely."""
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -56,7 +78,7 @@ class Engine:
         self.eos_id = eos_id
         self.sched = RequestScheduler(n_slots)
         self.requests: Dict[int, Request] = {}
-        self.pending: List[Request] = []
+        self.pending: Deque[Request] = deque()
         self._slot_req: Dict[int, Request] = {}
         self._next_rid = 0
         self._key = jax.random.PRNGKey(sampler.seed)
@@ -66,7 +88,28 @@ class Engine:
         self.metrics = obs.Registry()
         self._t_start = time.perf_counter()
 
-        # pool caches: per-slot len vector
+        if prefill_mode == "auto":
+            ring = (cfg.sliding_window is not None
+                    and cfg.sliding_window < max_len)
+            prefill_mode = ("chunked" if api.supports_chunked_prefill(cfg)
+                            and not ring else "legacy")
+        assert prefill_mode in ("chunked", "legacy")
+        self.prefill_mode = prefill_mode
+        self.chunk = prefill_chunk
+        if prefill_mode == "chunked":
+            assert max_len % prefill_chunk == 0, \
+                "max_len must be a multiple of prefill_chunk (chunk " \
+                "writes must never cross the cache capacity boundary)"
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(prefill_chunk, prefix_cache_entries)
+            if prefill_mode == "chunked" and prefix_cache_entries > 0
+            else None)
+        # per-slot prefill cursor (# prompt tokens already in the cache)
+        # and the prompt's chunk-hash chain, kept while the slot prefills
+        self._prefill_pos: Dict[int, int] = {}
+        self._chunk_hashes: Dict[int, List[str]] = {}
+
+        # pool caches: per-slot len vector (self.lens is its host mirror)
         self.caches = api.init_caches(cfg, n_slots, max_len)
         self.caches["len"] = jnp.zeros(n_slots, jnp.int32)
         self.lens = np.zeros(n_slots, np.int32)
@@ -83,14 +126,32 @@ class Engine:
                     return ax
             return None
         self._slot_ax = jax.tree.map(axis_of, s_a, s_b)
+        # init_caches' `len` is slot-count-independent, so axis_of sees
+        # no slot axis — but the engine replaces it with a per-slot [B]
+        # vector above.  Without this pin the masked merge would pass
+        # the +1'd len through for UNSELECTED lanes, silently shifting
+        # the write offset of any slot that sits out a decode tick
+        # (exactly what chunk-prefilling slots do).
+        self._slot_ax["len"] = 0
 
-        self._decode_fn = jax.jit(self._decode_step)
+        # cache-pool buffers are donated: every step functionally updates
+        # the pool, and without donation XLA must copy the whole pool per
+        # call (the dominant cost at CPU scale)
+        self._decode_fn = jax.jit(self._decode_step, donate_argnums=1)
         self._prefill_fn = jax.jit(self._prefill_one)
+        self._chunk_fn = jax.jit(self._prefill_chunk_step, donate_argnums=1)
+        self._write_fn = jax.jit(self._write_slot_impl, donate_argnums=0)
+        self._write_masked_fn = jax.jit(self._write_slots_masked_impl,
+                                        donate_argnums=0)
+        self._read_fn = jax.jit(self._read_slot_impl, static_argnums=2)
+        self._jit_sizes: Dict[str, int] = {}
 
     # ------------------------------------------------------------------ jit
 
     def _prefill_one(self, params, tokens, true_len):
-        """tokens [1, bucket] (padded); returns (next_token [1], caches)."""
+        """Legacy bucketed prefill: tokens [1, bucket] (padded); returns
+        (next_token [1], caches).  One jit entry PER BUCKET SIZE — the
+        recompile cost this PR's chunked path removes."""
         logits, _aux, caches = api.forward(params, {"tokens": tokens},
                                            self.cfg, mode="prefill",
                                            remat="none")
@@ -100,58 +161,177 @@ class Engine:
         tok = sample(last, self.cfg.vocab_size, self.sampler, self._key)
         return tok, caches
 
-    def _decode_step(self, params, caches, tokens, key):
+    def _prefill_chunk_step(self, params, caches, tokens, last_idx, key,
+                            sel):
+        """Batched chunk prefill over the WHOLE pool.
+
+        tokens [n_slots, chunk] (padded per slot); last_idx [n_slots] —
+        index of the final prompt token within this chunk, only
+        meaningful for slots whose prefill completes this call.  Returns
+        (sampled first token per slot [n_slots], new_caches).  One shape
+        -> one compile, ever; non-target lanes compute too (their cache
+        writes are discarded by the masked merge), the SIMT analogue of
+        predicated-off lanes sharing the issue slot.
+        """
+        logits, _aux, new_caches = api.forward(params, {"tokens": tokens},
+                                               self.cfg, mode="chunk",
+                                               caches=caches, remat="none")
+        last = jnp.take_along_axis(
+            logits, last_idx.reshape(-1, 1, 1).astype(jnp.int32),
+            axis=1)[:, 0]
+        tok = sample(last, self.cfg.vocab_size, self.sampler, key)
+        return tok, self._masked_merge(new_caches, caches, sel)
+
+    def _decode_step(self, params, caches, tokens, key, sel):
         logits, _aux, new_caches = api.forward(
             params, {"tokens": tokens[:, None]}, self.cfg, mode="decode",
             caches=caches, remat="none")
-        tok = sample(logits[:, -1], self.cfg.vocab_size, self.sampler, key)
-        return tok, new_caches
+        last = logits[:, -1]
+        tok = sample(last, self.cfg.vocab_size, self.sampler, key)
+        # jit-safe device counters (obs.registry pattern): merged into
+        # the host registry once per tick after the step returns
+        ctrs = obs.device_counters("sampled_tokens", "eos_sampled")
+        ctrs = obs.bump(ctrs, sampled_tokens=tok.shape[0],
+                        eos_sampled=jnp.sum(tok == self.eos_id))
+        ent = jnp.mean(logit_entropy(last, self.cfg.vocab_size))
+        return tok, self._masked_merge(new_caches, caches, sel), ctrs, ent
 
     # ------------------------------------------------------------- requests
 
     def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
+        prompt = list(prompt)
+        if not prompt or len(prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length must be in [1, {self.max_len - 1}]")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid=rid, prompt=list(prompt), max_new=max_new,
+        req = Request(rid=rid, prompt=prompt, max_new=max_new,
                       submit_t=time.perf_counter())
         self.requests[rid] = req
         self.pending.append(req)
         self.metrics.counter("serving.requests_submitted").inc()
         return rid
 
-    def _write_slot(self, slot: int, one_caches, prompt_len: int):
-        """Copy a prefilled (batch=1, padded-bucket) cache into pool slot,
-        using the structural slot-axis map."""
-        def put(pool, one, ax):
-            if ax is None or pool.ndim == 0 or one.ndim == 0:
+    # -------------------------------------------------------- cache surgery
+
+    def _write_slot_impl(self, caches, one_caches, slot):
+        """Jitted body of `_write_slot`: ONE fused dynamic_update_slice
+        per leaf (the eager pad + at[].set version dispatched ~30 ops and
+        dominated admission latency).  Source leaves narrower than the
+        pool (prefix snapshots cropped to n_tokens) are written at offset
+        0 and the junk beyond them is masked by the per-slot `len` and
+        overwritten in place by decode; wider leaves (legacy buckets >
+        max_len) are cropped."""
+        def put(pool, src, ax):
+            if ax is None or pool.ndim == 0 or src.ndim == 0:
                 return pool
-            src = one
-            # pad/crop every mismatched trailing axis (the sequence axis
-            # of KV leaves; recurrent-state leaves already match)
-            for sax in range(one.ndim):
-                if sax == ax or one.shape[sax] == pool.shape[sax]:
-                    continue
-                diff = pool.shape[sax] - src.shape[sax]
-                if diff > 0:
-                    w = [(0, 0)] * src.ndim
-                    w[sax] = (0, diff)
-                    src = jnp.pad(src, w)
-                else:
+            for sax in range(src.ndim):
+                if sax != ax and src.shape[sax] > pool.shape[sax]:
                     src = jax.lax.slice_in_dim(src, 0, pool.shape[sax],
                                                axis=sax)
-            idx = [slice(None)] * pool.ndim
-            idx[ax] = slice(slot, slot + 1)
-            return pool.at[tuple(idx)].set(src.astype(pool.dtype))
+            starts = [jnp.int32(0)] * pool.ndim
+            starts[ax] = slot
+            return jax.lax.dynamic_update_slice(
+                pool, src.astype(pool.dtype), tuple(starts))
 
-        pool_len = self.caches["len"]
-        one_caches = dict(one_caches)
-        one_caches.pop("len", None)
-        tree = dict(self.caches)
-        tree.pop("len")
         ax_tree = dict(self._slot_ax)
         ax_tree.pop("len", None)
-        self.caches = jax.tree.map(put, tree, one_caches, ax_tree)
-        self.caches["len"] = pool_len.at[slot].set(prompt_len)
+        return jax.tree.map(put, caches, one_caches, ax_tree)
+
+    def _write_slot(self, slot: int, one_caches, prompt_len: int):
+        """Copy a prefilled (batch=1) cache into pool slot `slot`, using
+        the structural slot-axis map."""
+        pool_len = self.caches["len"]
+        src = dict(one_caches)
+        src.pop("len", None)
+        tree = dict(self.caches)
+        tree.pop("len")
+        new = dict(self._write_fn(tree, src, jnp.int32(slot)))
+        new["len"] = pool_len.at[slot].set(prompt_len)
+        self.caches = new
+
+    def _write_slots_masked_impl(self, caches, one_caches, selj):
+        """Broadcast ONE batch=1 cache snapshot into every slot where
+        `selj` — the coalesced prefix-copy path: an admission wave whose
+        requests share a system-prompt prefix costs one pool-wide select
+        instead of one copy per slot."""
+        def put(pool, src, ax):
+            if ax is None or pool.ndim == 0 or src.ndim == 0:
+                return pool
+            for sax in range(src.ndim):
+                if sax != ax and src.shape[sax] > pool.shape[sax]:
+                    src = jax.lax.slice_in_dim(src, 0, pool.shape[sax],
+                                               axis=sax)
+            pads = [(0, 0) if i == ax else
+                    (0, pool.shape[i] - src.shape[i])
+                    for i in range(src.ndim)]
+            if any(p[1] for p in pads):
+                src = jnp.pad(src, pads)
+            shape = [1] * pool.ndim
+            shape[ax] = self.n_slots
+            return jnp.where(selj.reshape(shape), src.astype(pool.dtype),
+                             pool)
+
+        ax_tree = dict(self._slot_ax)
+        ax_tree.pop("len", None)
+        return jax.tree.map(put, caches, one_caches, ax_tree)
+
+    def _write_slots_masked(self, one_caches, sel: np.ndarray):
+        """Host wrapper for `_write_slots_masked_impl` (leaves the pool
+        `len` untouched — the caller syncs it from `self.lens`)."""
+        pool_len = self.caches["len"]
+        src = dict(one_caches)
+        src.pop("len", None)
+        tree = dict(self.caches)
+        tree.pop("len")
+        new = dict(self._write_masked_fn(tree, src, jnp.asarray(sel)))
+        new["len"] = pool_len
+        self.caches = new
+
+    def _read_slot_impl(self, caches, slot, n_tokens):
+        """Jitted body of `_read_slot` — one compile per distinct
+        `n_tokens` (bounded by max_len / chunk), slot stays traced."""
+        def take(path, pool, ax):
+            if ax is None or pool.ndim == 0:
+                return pool
+            out = jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=ax)
+            names = [str(getattr(p, "key", "")) for p in path]
+            last = names[-1] if names else ""
+            if last in ("k", "v", "xk", "xv") or last.endswith("_scale"):
+                seq_ax = ax + 1          # seq sits right of the slot axis
+                if out.shape[seq_ax] > n_tokens:
+                    out = jax.lax.slice_in_dim(out, 0, n_tokens,
+                                               axis=seq_ax)
+            return out
+
+        ax_tree = dict(self._slot_ax)
+        ax_tree.pop("len", None)
+        return jax.tree_util.tree_map_with_path(take, caches, ax_tree)
+
+    def _read_slot(self, slot: int, n_tokens: int):
+        """Inverse of `_write_slot`: a batch=1 snapshot of pool slot
+        `slot`, with KV sequence axes cropped to `n_tokens` (prefix-cache
+        entries store only the prefix they commit to)."""
+        tree = dict(self.caches)
+        tree.pop("len")
+        return self._read_fn(tree, jnp.int32(slot), int(n_tokens))
+
+    def _masked_merge(self, new_caches, old_caches, sel):
+        """Keep `new_caches` on slots where `sel`, `old_caches` elsewhere
+        (the lane-mask merge both the decode tick and the batched chunk
+        prefill use).  Called INSIDE the jitted step functions so XLA
+        fuses the select into the cache write instead of dispatching one
+        eager `where` per leaf per tick."""
+        selj = jnp.asarray(sel)
+
+        def keep(new, old, ax):
+            if ax is None or new.ndim == 0:
+                return new
+            shape = [1] * new.ndim
+            shape[ax] = self.n_slots
+            return jnp.where(selj.reshape(shape), new, old)
+
+        return jax.tree.map(keep, new_caches, old_caches, self._slot_ax)
 
     # ----------------------------------------------------------------- tick
 
@@ -159,15 +339,153 @@ class Engine:
         req.done = True
         req.finish_reason = reason
         self.sched.retire(req.slot)
+        # drop the engine's slot->request pin: retired requests must not
+        # stay reachable from the engine for its whole lifetime
+        self._slot_req.pop(req.slot, None)
+        self._prefill_pos.pop(req.slot, None)
+        self._chunk_hashes.pop(req.slot, None)
         self.metrics.counter("serving.requests_completed").inc()
         self.metrics.counter(f"serving.requests_completed.{reason}").inc()
         if req.submit_t:
             self.metrics.histogram("serving.request_latency_s").observe(
                 time.perf_counter() - req.submit_t)
 
+    def _begin_prefill_batch(self, admitted) -> None:
+        """Admission-time prefix-cache lookup for a whole admission wave:
+        copy the longest cached KV prefix into each slot and start its
+        chunk cursor past it.  Slots that matched the SAME prefix entry
+        (the shared-system-prompt case) are written in one coalesced
+        masked broadcast instead of one copy per slot."""
+        m = self.metrics
+        groups: Dict[int, list] = {}    # id(entry) -> [entry, [slots]]
+        for slot, req in admitted:
+            matched = 0
+            if self.prefix is not None:
+                matched, entry, hashes = self.prefix.match(req.prompt)
+                self._chunk_hashes[slot] = hashes
+                n_chunks = matched // self.chunk
+                m.counter("serving.prefix_cache.hits").inc(n_chunks)
+                m.counter("serving.prefix_cache.misses").inc(
+                    len(hashes) - n_chunks)
+                m.counter("serving.prefix_cache.hit_tokens").inc(matched)
+            if matched:
+                groups.setdefault(id(entry), [entry, []])[1].append(slot)
+            self.lens[slot] = matched
+            self._prefill_pos[slot] = matched
+        for entry, slots in groups.values():
+            sel = np.zeros(self.n_slots, bool)
+            sel[slots] = True
+            self._write_slots_masked(entry.caches, sel)
+        # ONE authoritative host->device len write per wave: matched
+        # slots start past their prefix, fresh (possibly recycled) slots
+        # reset to 0
+        self.caches["len"] = jnp.asarray(self.lens)
+
+    def _insert_prefix_entries(self, slot: int, req: Request) -> None:
+        """After a slot finishes prefilling, snapshot the DEEPEST
+        full-chunk boundary of its prompt into the prefix cache.  A
+        chain hash commits to its entire prefix and match() scans
+        deepest-first, so intermediate boundaries need no entries of
+        their own — storing them would multiply snapshot memory and
+        admission-copy work for no extra match depth."""
+        if self.prefix is None:
+            return
+        hashes = self._chunk_hashes.pop(slot, [])
+        if not hashes:
+            return
+        m = self.metrics
+        hkey = hashes[-1]
+        n = len(hashes) * self.chunk
+        if hkey in self.prefix:
+            self.prefix.insert(hkey, None, n)       # recency refresh only
+        else:
+            ev = self.prefix.insert(hkey, self._read_slot(slot, n), n)
+            m.counter("serving.prefix_cache.inserts").inc()
+            m.counter("serving.prefix_cache.evictions").inc(ev)
+        m.gauge("serving.prefix_cache.size").set(len(self.prefix))
+
+    def _finish_slot_prefill(self, slot: int, req: Request, tok: int) -> None:
+        """Shared prefill epilogue: record TTFT, seed decode state."""
+        m = self.metrics
+        now = time.perf_counter()
+        req.first_tok_t = req.last_tok_t = now
+        m.histogram("serving.ttft_s").observe(now - req.submit_t)
+        m.counter("serving.prefills").inc()
+        m.counter("serving.prompt_tokens").inc(len(req.prompt))
+        m.counter("serving.tokens").inc()
+        self.last_tok[slot] = tok
+        req.out.append(tok)
+        self.lens[slot] = len(req.prompt)
+        self.sched.prefill_done(slot)
+        self._insert_prefix_entries(slot, req)
+
+    def _prefill_tick_chunked(self) -> None:
+        """Advance EVERY stalled slot by one chunk in one batched call."""
+        targets = self.sched.prefill_targets()
+        if len(targets) == 0:
+            return
+        m = self.metrics
+        C = self.chunk
+        toks = np.zeros((self.n_slots, C), np.int32)
+        last_idx = np.zeros(self.n_slots, np.int32)
+        seg_len = {}
+        for slot in targets:
+            slot = int(slot)
+            req = self._slot_req[slot]
+            pos = self._prefill_pos[slot]
+            seg = req.prompt[pos:pos + C]
+            toks[slot, :len(seg)] = seg
+            last_idx[slot] = len(seg) - 1
+            seg_len[slot] = len(seg)
+        sel = np.zeros(self.n_slots, bool)
+        sel[targets] = True
+        self._key, k = jax.random.split(self._key)
+        with obs.trace.span("prefill_chunk", n=int(len(targets))):
+            tok, self.caches = self._chunk_fn(
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.asarray(last_idx), k, jnp.asarray(sel))
+            tok_np = np.asarray(tok)
+        m.counter("serving.prefill_chunk_calls").inc()
+        m.counter("serving.prefill_chunks").inc(int(len(targets)))
+        m.histogram("serving.prefill_batch_width").observe(len(targets))
+        for slot in targets:
+            slot = int(slot)
+            req = self._slot_req[slot]
+            pos_new = self._prefill_pos[slot] + seg_len[slot]
+            self._prefill_pos[slot] = pos_new
+            self.lens[slot] = pos_new
+            self.sched.prefill_step(slot)
+            if pos_new >= len(req.prompt):
+                self._finish_slot_prefill(slot, req, int(tok_np[slot]))
+        # one authoritative host->device len write per tick: targets got
+        # their cursors advanced, finished slots their true prompt length
+        self.caches["len"] = jnp.asarray(self.lens)
+
+    def _prefill_tick_legacy(self) -> None:
+        """Pre-PR path: one [1, bucket] forward per stalled slot, with a
+        per-bucket jit entry.  Kept as the fallback for families without
+        chunk-append caches and as the serving benchmark's baseline."""
+        m = self.metrics
+        for slot in self.sched.prefill_targets():
+            slot = int(slot)
+            req = self._slot_req[slot]
+            L = len(req.prompt)
+            buck = self.bucket
+            while buck < L:
+                buck *= 2
+            toks = np.zeros((1, buck), np.int32)
+            toks[0, :L] = req.prompt
+            with obs.trace.span("prefill", rid=req.rid, len=L, bucket=buck):
+                tok, one = self._prefill_fn(self.params, jnp.asarray(toks),
+                                            jnp.asarray([L], jnp.int32))
+                self._write_slot(slot, one, L)
+                t = int(tok[0])
+            self.sched.prefill_step(slot)
+            self._finish_slot_prefill(slot, req, t)
+
     def step(self) -> int:
         """One engine tick: admit -> prefill -> decode.  Returns number of
-        tokens produced.
+        *decode* tokens produced this tick.
 
         Token-count contract: `max_new` is the number of *decode* tokens
         generated after prefill.  The prefill pass itself samples one
@@ -178,42 +496,31 @@ class Engine:
         ended one decode token early.)
         """
         m = self.metrics
-        # 1. admission (slots are warps; wspawn)
+        # 1. admission (slots are warps; wspawn) — batched, so prefix
+        # copies for a wave sharing one entry coalesce into one write
+        admitted = []
         while self.pending:
             slot = self.sched.admit()
             if slot < 0:
                 break
-            req = self.pending.pop(0)
+            req = self.pending.popleft()
             req.slot = slot
             self._slot_req[slot] = req
+            admitted.append((slot, req))
+        if admitted:
+            self._begin_prefill_batch(admitted)
         m.gauge("serving.queue_depth").set(len(self.pending))
         m.gauge("serving.slot_occupancy").set(
             float(self.sched.active.sum()) / self.n_slots)
 
-        # 2. prefill stalled slots (memory-wait analogue)
-        for slot in np.flatnonzero(self.sched.active & self.sched.stalled):
-            req = self._slot_req[int(slot)]
-            L = len(req.prompt)
-            buck = self.bucket
-            while buck < L:
-                buck *= 2
-            toks = np.zeros((1, buck), np.int32)
-            toks[0, :L] = req.prompt
-            with obs.trace.span("prefill", rid=req.rid, len=L, bucket=buck):
-                tok, one = self._prefill_fn(self.params, jnp.asarray(toks),
-                                            jnp.asarray([L], jnp.int32))
-                self._write_slot(int(slot), one, L)
-                t = int(tok[0])
-            now = time.perf_counter()
-            req.first_tok_t = req.last_tok_t = now
-            m.histogram("serving.ttft_s").observe(now - req.submit_t)
-            m.counter("serving.prefills").inc()
-            m.counter("serving.prompt_tokens").inc(L)
-            m.counter("serving.tokens").inc()
-            self.last_tok[slot] = t
-            req.out.append(t)
-            self.lens[slot] = L
-            self.sched.prefill_done(int(slot))
+        # 2. prefill stalled slots (memory-wait analogue): chunked slots
+        # stay stalled-but-progressing across ticks; legacy slots fill in
+        # one blocking call each
+        if self.prefill_mode == "chunked":
+            self._prefill_tick_chunked()
+        else:
+            self._prefill_tick_legacy()
+        self._note_recompiles()
 
         # 3. decode tick over selected slots
         picked = self.sched.next_batch(self.decode_width)
@@ -230,27 +537,15 @@ class Engine:
         m.gauge("serving.decode_batch_efficiency").set(
             len(picked) / self.n_slots)
         # lanes not selected decode too (masked); their state is restored
-        old_caches = self.caches
         self._key, k = jax.random.split(self._key)
         toks = jnp.asarray(self.last_tok)
         with obs.trace.span("decode_tick", n=len(picked)):
-            new_tok, new_caches = self._decode_fn(self.params, self.caches,
-                                                  toks, k)
-            selj = jnp.asarray(sel)
-
-            def keep(new, old, ax):
-                if ax is None or new.ndim == 0:
-                    return new
-                shape = [1] * new.ndim
-                shape[ax] = self.n_slots
-                mask = selj.reshape(shape)
-                return jnp.where(mask, new, old)
-
-            self.caches = jax.tree.map(keep, new_caches, old_caches,
-                                       self._slot_ax)
-            self.caches["len"] = jnp.where(selj, new_caches["len"],
-                                           old_caches["len"])
+            new_tok, self.caches, dev_ctrs, ent = self._decode_fn(
+                self.params, self.caches, toks, k, jnp.asarray(sel))
             toks_np = np.asarray(new_tok)
+        obs.merge_device(m, dev_ctrs, prefix="serving.decode.")
+        m.histogram("serving.decode.logit_entropy").observe(float(ent))
+        self._note_recompiles()
 
         produced = 0
         now = time.perf_counter()
@@ -276,6 +571,23 @@ class Engine:
             / max(time.perf_counter() - self._t_start, 1e-9))
         return produced
 
+    def _note_recompiles(self) -> None:
+        """Export jit-cache growth as `serving.recompiles.*` counters —
+        the chunked path's whole point is that `prefill_chunk` stays at
+        1 forever while legacy `prefill` grows per bucket."""
+        for name, fn in (("prefill", self._prefill_fn),
+                         ("prefill_chunk", self._chunk_fn),
+                         ("decode", self._decode_fn)):
+            try:
+                n = int(fn._cache_size())
+            except Exception:
+                continue
+            prev = self._jit_sizes.get(name, 0)
+            if n > prev:
+                self.metrics.counter(f"serving.recompiles.{name}").inc(
+                    n - prev)
+                self._jit_sizes[name] = n
+
     def run(self, max_ticks: int = 1000) -> None:
         for _ in range(max_ticks):
             busy = self.pending or self.sched.active.any()
@@ -288,11 +600,7 @@ class Engine:
 
     def metrics_snapshot(self) -> Dict[str, Any]:
         """JSON-serializable summary of every serving instrument."""
+        if self.prefix is not None:
+            self.metrics.gauge("serving.prefix_cache.size").set(
+                len(self.prefix))
         return self.metrics.snapshot()
-
-
-def _slot_axis(arr, n_slots: int) -> Optional[int]:
-    for ax, d in enumerate(arr.shape):
-        if d == n_slots:
-            return ax
-    return None

@@ -31,3 +31,13 @@ def sample(logits: jax.Array, vocab_size: int, cfg: SamplerConfig,
         lf = jnp.where(lf < kth, -1e30, lf)
     assert key is not None, "stochastic sampling needs a PRNG key"
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def logit_entropy(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """Shannon entropy (nats) of softmax(logits) per row, padded vocab
+    excluded.  logits: [B, Vp] -> [B] fp32.  jit-safe — the serving
+    engine computes it inside the jitted decode step and records the
+    batch mean through `obs.device_counters`-style host merging."""
+    lf = logits.astype(jnp.float32)[..., :vocab_size]
+    lp = jax.nn.log_softmax(lf, axis=-1)
+    return -jnp.sum(jnp.exp(lp) * lp, axis=-1)

@@ -8,7 +8,6 @@ model API supports trains through the same code path (whisper trains on
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -17,7 +16,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.distributed import compression
 from repro.models import api
-from repro.models.common import padded_vocab
 from repro.training import optimizer as opt_mod
 
 

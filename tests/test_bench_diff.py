@@ -1,0 +1,87 @@
+"""Benchmark regression gate: exit-code contract of benchmarks.diff
+(0 = within tolerance, 1 = regression, 2 = missing artifact)."""
+import json
+
+from benchmarks import diff
+
+
+def _fig9(cycles):
+    return {"vecadd/2w2t": {"stats": {"cycles": cycles, "instrs": 1},
+                            "perf": {}}}
+
+
+def _serving(speedup, chunks=10):
+    return {"gate": {
+        "ttft_speedup": {"value": speedup, "better": "higher", "tol": 0.5},
+        "prefill_chunks": {"value": chunks, "better": "lower", "tol": 0.0},
+    }}
+
+
+def _dirs(tmp_path, base_docs, cur_docs):
+    b, c = tmp_path / "base", tmp_path / "cur"
+    b.mkdir(), c.mkdir()
+    for d, docs in ((b, base_docs), (c, cur_docs)):
+        for name, doc in docs.items():
+            (d / name).write_text(json.dumps(doc))
+    return ["--baseline-dir", str(b), "--current-dir", str(c)]
+
+
+def test_gate_passes_within_tolerance(tmp_path):
+    argv = _dirs(tmp_path,
+                 {"BENCH_fig9_rodinia.json": _fig9(1000),
+                  "BENCH_serving.json": _serving(2.0)},
+                 {"BENCH_fig9_rodinia.json": _fig9(1100),   # exactly +10%
+                  "BENCH_serving.json": _serving(1.01)})    # within tol .5
+    assert diff.main(argv) == 0
+
+
+def test_gate_passes_on_improvement(tmp_path):
+    argv = _dirs(tmp_path,
+                 {"BENCH_fig9_rodinia.json": _fig9(1000),
+                  "BENCH_serving.json": _serving(2.0)},
+                 {"BENCH_fig9_rodinia.json": _fig9(600),
+                  "BENCH_serving.json": _serving(5.0)})
+    assert diff.main(argv) == 0
+
+
+def test_gate_fails_on_cycle_regression(tmp_path):
+    argv = _dirs(tmp_path,
+                 {"BENCH_fig9_rodinia.json": _fig9(1000)},
+                 {"BENCH_fig9_rodinia.json": _fig9(1101)})  # > +10%
+    assert diff.main(argv + ["--files", "BENCH_fig9_rodinia.json"]) == 1
+
+
+def test_gate_fails_on_speedup_collapse(tmp_path):
+    argv = _dirs(tmp_path,
+                 {"BENCH_serving.json": _serving(2.0)},
+                 {"BENCH_serving.json": _serving(0.9)})     # below 50% tol
+    assert diff.main(argv + ["--files", "BENCH_serving.json"]) == 1
+
+
+def test_gate_pins_exact_counters(tmp_path):
+    argv = _dirs(tmp_path,
+                 {"BENCH_serving.json": _serving(2.0, chunks=10)},
+                 {"BENCH_serving.json": _serving(2.0, chunks=11)})
+    assert diff.main(argv + ["--files", "BENCH_serving.json"]) == 1
+
+
+def test_gate_fails_on_missing_metric(tmp_path):
+    cur = _serving(2.0)
+    del cur["gate"]["prefill_chunks"]
+    argv = _dirs(tmp_path,
+                 {"BENCH_serving.json": _serving(2.0)},
+                 {"BENCH_serving.json": cur})
+    assert diff.main(argv + ["--files", "BENCH_serving.json"]) == 1
+
+
+def test_gate_exit_2_on_missing_artifact(tmp_path):
+    argv = _dirs(tmp_path,
+                 {"BENCH_fig9_rodinia.json": _fig9(1000),
+                  "BENCH_serving.json": _serving(2.0)},
+                 {"BENCH_fig9_rodinia.json": _fig9(1000)})
+    assert diff.main(argv) == 2
+
+
+def test_gate_skips_files_without_baseline(tmp_path):
+    argv = _dirs(tmp_path, {}, {"BENCH_serving.json": _serving(1.0)})
+    assert diff.main(argv) == 0

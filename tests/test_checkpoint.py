@@ -1,5 +1,4 @@
 """Checkpoint store/manager: atomicity, checksums, keep-K, latest-valid."""
-import json
 import os
 
 import jax

@@ -1,12 +1,11 @@
 """Coverage for the SIMT combinators + remaining substrate: simt_cond,
 masked_call, elastic planning, data-pipeline determinism, optimizer math."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.combinators import masked_call, simt_cond
-from repro.core.spawn import grid_spawn, spawn_ranges
+from repro.core.spawn import grid_spawn
 from repro.data.pipeline import Loader, SyntheticLM
 from repro.distributed.elastic import PodMasks, RescalePlan, StragglerPolicy
 from repro.configs import reduced_config

@@ -1,0 +1,63 @@
+"""Prefix cache: chain-hash semantics, deepest-first matching, LRU
+eviction/recency accounting."""
+from repro.serving.prefix_cache import PrefixCache, chain_hashes
+
+
+def test_chain_hash_count_excludes_last_token():
+    # only FULL chunks of prompt[:-1] are hashed: the engine must always
+    # run a real forward over the last token to get first-token logits
+    for n, chunk, want in [(1, 4, 0), (4, 4, 0), (5, 4, 1), (8, 4, 1),
+                           (9, 4, 2), (17, 4, 4), (0, 4, 0)]:
+        assert len(chain_hashes(list(range(n)), chunk)) == want, (n, chunk)
+
+
+def test_chain_hash_ignores_trailing_partial_chunk():
+    p = [3, 1, 4, 1, 5, 9, 2, 6, 5]            # 9 tokens, chunk 4
+    q = p[:-1] + [999]                         # only the last differs
+    assert chain_hashes(p, 4) == chain_hashes(q, 4)
+
+
+def test_chain_hash_commits_to_entire_prefix():
+    a = [1, 2, 3, 4, 5, 6, 7, 8, 9]
+    b = [1, 2, 3, 4, 9, 9, 9, 9, 9]            # shares first chunk only
+    ha, hb = chain_hashes(a, 4), chain_hashes(b, 4)
+    assert ha[0] == hb[0] and ha[1] != hb[1]
+    # chaining: a change in token 0 perturbs every depth
+    c = [0] + a[1:]
+    assert all(x != y for x, y in zip(ha, chain_hashes(c, 4)))
+
+
+def test_match_deepest_first_needs_no_intermediate_entries():
+    pc = PrefixCache(2, capacity=4)
+    p = [1, 2, 3, 4, 5, 6, 7]                  # (7-1)//2 = 3 full chunks
+    hs = chain_hashes(p, 2)
+    pc.insert(hs[2], "deep", 6)                # only the deepest boundary
+    matched, entry, hs2 = pc.match(p)
+    assert (matched, hs2) == (6, hs)
+    assert entry.caches == "deep"
+    assert (pc.hits, pc.misses) == (3, 0)
+
+
+def test_match_falls_back_to_shallower_entry():
+    pc = PrefixCache(2, capacity=4)
+    p = [1, 2, 3, 4, 5, 6, 7]
+    hs = chain_hashes(p, 2)
+    pc.insert(hs[2], "deep", 6)
+    pc.insert(hs[0], "shallow", 2)
+    q = [1, 2, 9, 9, 9, 9, 9]                  # shares only chunk 0
+    matched, entry, _ = pc.match(q)
+    assert matched == 2 and entry.caches == "shallow"
+    # and a prompt sharing nothing matches nothing
+    matched, entry, _ = pc.match([8, 8, 8, 8, 8])
+    assert matched == 0 and entry is None
+
+
+def test_lru_eviction_and_recency_refresh():
+    pc = PrefixCache(4, capacity=2)
+    assert pc.insert("a", "A", 4) == 0
+    assert pc.insert("b", "B", 8) == 0
+    assert pc.insert("a", None, 4) == 0        # refresh, not replace
+    assert pc.match([0, 0, 0, 0, 0]) == (0, None, chain_hashes([0] * 5, 4))
+    assert pc.insert("c", "C", 4) == 1         # evicts "b" (LRU)
+    assert "b" not in pc and "a" in pc and "c" in pc
+    assert pc.evictions == 1 and len(pc) == 2

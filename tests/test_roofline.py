@@ -1,7 +1,6 @@
 """Trip-aware HLO cost analysis: validated against hand-counted programs."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.roofline import hlo_cost
 from repro.roofline.analysis import parse_collectives

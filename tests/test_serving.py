@@ -2,8 +2,6 @@
 recycling, scheduler fairness."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.configs import reduced_config
 from repro.models import api
@@ -82,8 +80,10 @@ def test_results_before_any_admission():
 
 def test_scheduler_no_duplicate_issue_per_tick():
     s = RequestScheduler(4)
-    a = s.admit(); b = s.admit()
-    s.prefill_done(a); s.prefill_done(b)
+    a = s.admit()
+    b = s.admit()
+    s.prefill_done(a)
+    s.prefill_done(b)
     picked = s.next_batch(8)          # width > schedulable count
     assert sorted(picked) == sorted(set(picked))
     assert set(picked) <= {a, b}
@@ -106,3 +106,121 @@ def test_stalled_slots_not_decoded():
     b = s.admit()
     s.prefill_done(b)
     assert s.next_batch(2) == [b]
+
+
+def test_chunked_and_legacy_prefill_agree():
+    """Multi-chunk prompts through the chunked path produce exactly the
+    greedy tokens the legacy bucketed prefill (and the sequential
+    reference) produce."""
+    prompts = [[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11], [4, 4, 2, 1],
+               [9] * 20]
+    outs = {}
+    for mode in ("chunked", "legacy"):
+        eng = Engine(CFG, PARAMS, n_slots=2, max_len=64, prompt_bucket=8,
+                     prefill_chunk=8, prefill_mode=mode, eos_id=-1)
+        rids = [eng.submit(p, max_new=4) for p in prompts]
+        eng.run()
+        outs[mode] = [eng.results()[r] for r in rids]
+    assert outs["chunked"] == outs["legacy"]
+    for out, p in zip(outs["chunked"], prompts):
+        assert out == ref_decode(p, 5), p
+
+
+def test_prefix_cache_hits_preserve_outputs():
+    """Requests whose prompts share a cached prefix skip those chunk
+    forwards entirely — and still emit exactly the reference tokens."""
+    shared = list(range(1, 17))                # 16 tokens = 2 chunks of 8
+    tails = [[21, 22, 23], [31, 32], [41]]
+    eng = Engine(CFG, PARAMS, n_slots=1, max_len=64, prompt_bucket=8,
+                 prefill_chunk=8, prefill_mode="chunked",
+                 prefix_cache_entries=4, eos_id=-1)
+    rids = [eng.submit(shared + t, max_new=3) for t in tails]
+    eng.run()
+    snap = eng.metrics_snapshot()
+    assert snap["serving.prefix_cache.hits"]["value"] == 4   # 2 x 2 chunks
+    assert snap["serving.prefix_cache.hit_tokens"]["value"] == 32
+    assert snap["serving.prefix_cache.inserts"]["value"] >= 1
+    for rid, t in zip(rids, tails):
+        assert eng.results()[rid] == ref_decode(shared + t, 4), t
+
+
+def test_finish_clears_slot_bookkeeping():
+    """Retired requests leave no engine-side pins (slot map, prefill
+    cursor, chunk hashes) — recycled slots start clean."""
+    eng = Engine(CFG, PARAMS, n_slots=2, max_len=64, prompt_bucket=8,
+                 eos_id=-1)
+    for i in range(3):
+        eng.submit([i + 1, i + 2, i + 3], max_new=2)
+    eng.run()
+    assert eng._slot_req == {}
+    assert eng._prefill_pos == {}
+    assert eng._chunk_hashes == {}
+
+
+def test_scheduler_admit_when_pool_full():
+    s = RequestScheduler(2)
+    assert s.admit() == 0
+    assert s.admit() == 1
+    assert s.admit() == -1                     # pool full
+    s.retire(0)
+    assert s.admit() == 0                      # freed slot is reusable
+
+
+def test_scheduler_barrier_excludes_prefill_and_decode():
+    s = RequestScheduler(3)
+    a, b, c = s.admit(), s.admit(), s.admit()
+    s.barrier[b] = True                        # parked mid-prefill
+    assert list(s.prefill_targets()) == [a, c]
+    s.prefill_done(a)
+    s.prefill_done(c)
+    s.barrier[c] = True                        # parked after prefill
+    assert s.next_batch(3) == [a]
+
+
+def test_scheduler_retire_mid_window_refill():
+    """A slot retired after issuing is never issued again, and the
+    remaining window drains without a bubble."""
+    s = RequestScheduler(3)
+    slots = [s.admit() for _ in range(3)]
+    for x in slots:
+        s.prefill_done(x)
+    first = s.next_batch(1)
+    s.retire(first[0])
+    seen = set()
+    for _ in range(4):
+        seen |= set(s.next_batch(1))
+    assert first[0] not in seen
+    assert seen == set(slots) - set(first)
+    assert s.prefill_progress[first[0]] == 0   # progress cleared too
+
+
+def test_scheduler_round_robin_over_many_ticks():
+    """Two-level scheduling gives every slot the same issue share over a
+    long horizon (the hierarchical warp-fairness property)."""
+    s = RequestScheduler(4)
+    slots = [s.admit() for _ in range(4)]
+    for x in slots:
+        s.prefill_done(x)
+    counts = {x: 0 for x in slots}
+    for _ in range(40):
+        for w in s.next_batch(2):
+            counts[w] += 1
+    assert all(counts[x] == 20 for x in slots), counts
+
+
+def test_step_masks_np_matches_hw_reference():
+    """The serving scheduler's NumPy mask algebra is bit-exact with the
+    cycle-level simulator's jnp version across random mask states."""
+    import numpy as np
+
+    from repro.serving.scheduler import step_masks_np
+    from repro.core.simt import scheduler as hw
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        W = int(rng.integers(1, 9))
+        vis, act, st, bar = (rng.random(W) < 0.5 for _ in range(4))
+        wid_np, vis_np = step_masks_np(vis, act, st, bar)
+        wid_hw, vis_hw = hw.step_masks(jnp.asarray(vis), jnp.asarray(act),
+                                       jnp.asarray(st), jnp.asarray(bar))
+        assert wid_np == int(wid_hw)
+        assert (vis_np == np.asarray(vis_hw)).all()
