@@ -127,15 +127,25 @@ def run_all() -> dict:
     def ctr(wname, name):
         return snapshots[(wname, "chunked")].get(name, {}).get("value", 0)
 
-    # gate metrics: deterministic counters (exact) + wall-clock ratios
-    # (generous tolerances — CI machines are noisy, ratios less so)
+    # gate metrics, in three reliability tiers (the spec travels with
+    # the committed baseline — benchmarks/diff.py reads it from there):
+    #   - wall-clock ratios: mode="report" — printed in the bench-gate
+    #     log but can never fail it; shared CI runners are too noisy to
+    #     hard-gate on until their variance is characterized
+    #   - workload counters (cache hits, prefill chunks): pure engine
+    #     arithmetic over a fixed workload, independent of the JAX
+    #     version — pinned exact (tol 0)
+    #   - recompile counters: depend on XLA's compile-cache behavior, so
+    #     a dependency bump can legitimately shift them by a compile or
+    #     two — abs_tol 2 absorbs that while the legacy path's
+    #     per-bucket recompile blowup still fails
     doc["gate"] = {
         "shared_prefix_ttft_speedup": {
             "value": doc["workloads"]["shared_prefix"]["ttft_speedup"],
-            "better": "higher", "tol": 0.5},
+            "better": "higher", "tol": 0.5, "mode": "report"},
         "cold_ttft_speedup": {
             "value": doc["workloads"]["cold"]["ttft_speedup"],
-            "better": "higher", "tol": 0.5},
+            "better": "higher", "tol": 0.5, "mode": "report"},
         "shared_prefix_cache_hit_chunks": {
             "value": ctr("shared_prefix", "serving.prefix_cache.hits"),
             "better": "higher", "tol": 0.0},
@@ -144,7 +154,7 @@ def run_all() -> dict:
             "better": "lower", "tol": 0.0},
         "chunked_prefill_recompiles": {
             "value": ctr("shared_prefix", "serving.recompiles.prefill_chunk"),
-            "better": "lower", "tol": 0.0},
+            "better": "lower", "tol": 0.0, "abs_tol": 2},
     }
     doc["metrics"] = {f"{w}/{m}": snap
                       for (w, m), snap in snapshots.items()}

@@ -148,17 +148,20 @@ class Engine:
 
     # ------------------------------------------------------------------ jit
 
-    def _prefill_one(self, params, tokens, true_len):
+    def _prefill_one(self, params, tokens, true_len, key):
         """Legacy bucketed prefill: tokens [1, bucket] (padded); returns
         (next_token [1], caches).  One jit entry PER BUCKET SIZE — the
-        recompile cost this PR's chunked path removes."""
+        recompile cost this PR's chunked path removes.  `key` must be an
+        explicit argument: read via closure it would be baked in as a
+        trace-time constant and every stochastic sample on this path
+        would reuse the same key."""
         logits, _aux, caches = api.forward(params, {"tokens": tokens},
                                            self.cfg, mode="prefill",
                                            remat="none")
         last = jnp.take_along_axis(
             logits, (true_len - 1).reshape(1, 1, 1).astype(jnp.int32),
             axis=1)[:, 0]
-        tok = sample(last, self.cfg.vocab_size, self.sampler, self._key)
+        tok = sample(last, self.cfg.vocab_size, self.sampler, key)
         return tok, caches
 
     def _prefill_chunk_step(self, params, caches, tokens, last_idx, key,
@@ -475,9 +478,10 @@ class Engine:
                 buck *= 2
             toks = np.zeros((1, buck), np.int32)
             toks[0, :L] = req.prompt
+            self._key, k = jax.random.split(self._key)
             with obs.trace.span("prefill", rid=req.rid, len=L, bucket=buck):
                 tok, one = self._prefill_fn(self.params, jnp.asarray(toks),
-                                            jnp.asarray([L], jnp.int32))
+                                            jnp.asarray([L], jnp.int32), k)
                 self._write_slot(slot, one, L)
                 t = int(tok[0])
             self.sched.prefill_step(slot)

@@ -42,7 +42,11 @@ def chain_hashes(prompt: Sequence[int], chunk: int) -> List[str]:
     h = hashlib.sha256()
     for d in range(n_full):
         seg = prompt[d * chunk:(d + 1) * chunk]
-        h.update(b"|".join(str(int(t)).encode() for t in seg))
+        # every token is TERMINATED by the delimiter, not just separated:
+        # successive h.update calls concatenate, so "1|23" + "4|5" and
+        # "1|2" + "34|5" would otherwise hash identical byte streams and
+        # match() could hand one prompt another prompt's KV prefix
+        h.update(b"".join(str(int(t)).encode() + b"|" for t in seg))
         hs.append(h.hexdigest())
     return hs
 

@@ -65,6 +65,46 @@ def test_gate_pins_exact_counters(tmp_path):
     assert diff.main(argv + ["--files", "BENCH_serving.json"]) == 1
 
 
+def test_report_mode_never_fails_on_value(tmp_path):
+    # wall-clock ratios are report-only: a collapse is printed but must
+    # not fail the gate (shared CI runners are too noisy to hard-gate)
+    def doc(speedup):
+        return {"gate": {"ttft_speedup": {
+            "value": speedup, "better": "higher", "tol": 0.5,
+            "mode": "report"}}}
+    argv = _dirs(tmp_path, {"BENCH_serving.json": doc(3.0)},
+                 {"BENCH_serving.json": doc(0.1)})
+    assert diff.main(argv + ["--files", "BENCH_serving.json"]) == 0
+
+
+def test_report_mode_metric_must_still_be_present(tmp_path):
+    # report-only applies to the VALUE; silently dropping the metric
+    # from the artifact is still a gate failure
+    base = {"gate": {"ttft_speedup": {
+        "value": 3.0, "better": "higher", "tol": 0.5, "mode": "report"}}}
+    argv = _dirs(tmp_path, {"BENCH_serving.json": base},
+                 {"BENCH_serving.json": {"gate": {}}})
+    assert diff.main(argv + ["--files", "BENCH_serving.json"]) == 1
+
+
+def test_abs_tol_gives_counter_headroom(tmp_path):
+    # recompile counters get fixed headroom (abs_tol) so a dependency
+    # bump shifting compile counts by 1-2 passes, while a per-bucket
+    # recompile blowup still fails
+    def doc(recompiles):
+        return {"gate": {"recompiles": {
+            "value": recompiles, "better": "lower", "tol": 0.0,
+            "abs_tol": 2}}}
+    within = _dirs(tmp_path, {"BENCH_serving.json": doc(1)},
+                   {"BENCH_serving.json": doc(3)})
+    assert diff.main(within + ["--files", "BENCH_serving.json"]) == 0
+    sub = tmp_path / "b"
+    sub.mkdir()
+    blowup = _dirs(sub, {"BENCH_serving.json": doc(1)},
+                   {"BENCH_serving.json": doc(4)})
+    assert diff.main(blowup + ["--files", "BENCH_serving.json"]) == 1
+
+
 def test_gate_fails_on_missing_metric(tmp_path):
     cur = _serving(2.0)
     del cur["gate"]["prefill_chunks"]

@@ -27,6 +27,30 @@ def test_chain_hash_commits_to_entire_prefix():
     assert all(x != y for x, y in zip(ha, chain_hashes(c, 4)))
 
 
+def test_chain_hash_boundary_rebracketing_no_collision():
+    # with chunk=2 the full chunks are [1,23],[4,5] vs [1,2],[34,5]: a
+    # separator-only encoding concatenates both to b"1|234|5" across the
+    # incremental hash updates, colliding at depth 2 — which would let
+    # match() serve one prompt another prompt's KV prefix (constructible
+    # cross-request cache poisoning).  Tokens must be terminated.
+    a = [1, 23, 4, 5, 0]
+    b = [1, 2, 34, 5, 0]
+    ha, hb = chain_hashes(a, 2), chain_hashes(b, 2)
+    assert len(ha) == len(hb) == 2
+    assert ha[0] != hb[0]
+    assert ha[1] != hb[1]
+
+
+def test_match_rejects_rebracketed_prompt():
+    # end-to-end on PrefixCache: an entry stored for prompt `a` must not
+    # match prompt `b` that merely re-brackets the same digit stream
+    pc = PrefixCache(2, capacity=4)
+    a = [1, 23, 4, 5, 0]
+    pc.insert(chain_hashes(a, 2)[-1], "A", 4)
+    matched, entry, _ = pc.match([1, 2, 34, 5, 0])
+    assert matched == 0 and entry is None
+
+
 def test_match_deepest_first_needs_no_intermediate_entries():
     pc = PrefixCache(2, capacity=4)
     p = [1, 2, 3, 4, 5, 6, 7]                  # (7-1)//2 = 3 full chunks
