@@ -25,17 +25,30 @@ from repro.checkpoint import store
 
 
 class CheckpointManager:
-    def __init__(self, dirpath: str, keep: int = 3):
+    def __init__(self, dirpath: str, keep: int = 3, injector: Any = None):
         self.dir = dirpath
         self.keep = keep
+        # optional faults.FaultInjector — when a "ckpt.save"/"corrupt"
+        # fault is due, the freshly written shard is byte-flipped so the
+        # verified-restore path gets exercised end to end
+        self.injector = injector
         self._thread: Optional[threading.Thread] = None
         self._last_state: Optional[Tuple[int, Any, Dict]] = None
         self._lock = threading.Lock()
+
+    def _maybe_corrupt(self, path: str) -> None:
+        if self.injector is None:
+            return
+        for f in self.injector.poll("ckpt.save"):
+            if f.kind == "corrupt":
+                from repro.faults.chaos import corrupt_checkpoint
+                corrupt_checkpoint(path, seed=int(f.arg))
 
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
         path = store.save(self.dir, step, tree, meta)
+        self._maybe_corrupt(path)
         self._gc()
         return path
 
@@ -48,7 +61,8 @@ class CheckpointManager:
             self._last_state = (step, host_tree, meta or {})
 
         def work():
-            store.save(self.dir, step, host_tree, meta)
+            path = store.save(self.dir, step, host_tree, meta)
+            self._maybe_corrupt(path)
             self._gc()
 
         self._thread = threading.Thread(target=work, daemon=True)
@@ -75,13 +89,13 @@ class CheckpointManager:
 
     def restore_latest(self, like: Any, shardings: Any = None
                        ) -> Optional[Tuple[int, Any, Dict]]:
-        """(step, tree, meta) from the newest checkpoint that verifies, or
+        """(step, tree, meta) from the newest checkpoint that restores
+        with clean checksums (walking back past corrupt entries), or
         None if there is nothing to restore."""
-        s = self.latest_valid_step()
-        if s is None:
+        try:
+            return store.restore_latest_verified(self.dir, like, shardings)
+        except FileNotFoundError:
             return None
-        tree, meta = store.restore(self.dir, s, like, shardings)
-        return s, tree, meta
 
     # -- preemption ---------------------------------------------------------
 

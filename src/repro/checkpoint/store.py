@@ -30,6 +30,10 @@ import numpy as np
 SEP = "/"
 
 
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed checksum validation on restore."""
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -53,8 +57,19 @@ def _checksum(a: np.ndarray) -> str:
 
 def save(dirpath: str, step: int, tree: Any,
          meta: Optional[Dict[str, Any]] = None) -> str:
-    """Write one atomic checkpoint; returns the final path."""
+    """Write one atomic checkpoint; returns the final path.
+
+    Overwriting an existing step swaps via a `.old` rename instead of
+    deleting first (an earlier revision did `rmtree(final)` before
+    `rename(tmp, final)`, so a crash in that window destroyed the
+    previous good checkpoint).  With the swap, a complete copy of the
+    data exists on disk at every instant: crash before the first rename
+    leaves `final` untouched; crash between the renames leaves a
+    complete `tmp` and a complete `.old`, both of which `recover()`
+    promotes back on the next save/list.
+    """
     os.makedirs(dirpath, exist_ok=True)
+    recover(dirpath)
     final = os.path.join(dirpath, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -76,9 +91,47 @@ def save(dirpath: str, step: int, tree: Any,
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+        old = final + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)       # previous checkpoint stays complete...
+        os.rename(tmp, final)       # ...until the new one is in place
+        shutil.rmtree(old)
+    else:
+        os.rename(tmp, final)
     return final
+
+
+def recover(dirpath: str) -> List[str]:
+    """Repair save() sequences interrupted between the two renames: for
+    each orphaned `step_X.old` whose `step_X` is missing, promote the
+    completed tmp (newer data) if it verifies, else the `.old` (the
+    previous good checkpoint).  Returns the paths repaired.  A `.old`
+    next to an existing complete `step_X` is leftover garbage from a
+    crash after the second rename and is dropped."""
+    if not os.path.isdir(dirpath):
+        return []
+    repaired: List[str] = []
+    for name in sorted(os.listdir(dirpath)):
+        m = re.fullmatch(r"(step_\d+)\.old", name)
+        if not m:
+            continue
+        final = os.path.join(dirpath, m.group(1))
+        old = os.path.join(dirpath, name)
+        tmp = final + ".tmp"
+        if os.path.exists(final):
+            if _is_complete(final):
+                shutil.rmtree(old, ignore_errors=True)
+            continue
+        if verify(tmp):
+            os.rename(tmp, final)
+            shutil.rmtree(old, ignore_errors=True)
+            repaired.append(final)
+        elif verify(old):
+            os.rename(old, final)
+            repaired.append(final)
+        # neither verifies: leave both for operator inspection
+    return repaired
 
 
 def _is_complete(path: str) -> bool:
@@ -113,10 +166,17 @@ def verify(path: str) -> bool:
 
 
 def restore(dirpath: str, step: int, like: Any,
-            shardings: Any = None) -> Tuple[Any, Dict[str, Any]]:
+            shardings: Any = None, *,
+            strict: bool = True) -> Tuple[Any, Dict[str, Any]]:
     """Restore into the structure of `like` (a pytree of arrays or
     ShapeDtypeStructs).  `shardings`: optional matching tree of
-    jax.sharding.Sharding to place the restored leaves."""
+    jax.sharding.Sharding to place the restored leaves.
+
+    With `strict=True` (the default) every loaded array is checksummed
+    against the manifest and a mismatch raises `CheckpointCorrupt` —
+    silently training on flipped bits is strictly worse than crashing.
+    `strict=False` is the forensic escape hatch: load whatever bytes are
+    there (e.g. to diff a corrupt shard against a good one)."""
     path = os.path.join(dirpath, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -126,6 +186,13 @@ def restore(dirpath: str, step: int, like: Any,
     with np.load(os.path.join(path, "arrays.npz")) as z:
         for k, proto in flat_like.items():
             a = z[k]
+            if strict:
+                want = manifest["checksums"].get(k)
+                # checksum the raw stored array, BEFORE any dtype
+                # view-back — save() checksummed the same encoding
+                if want is None or _checksum(a) != want:
+                    raise CheckpointCorrupt(
+                        f"{path}: checksum mismatch for '{k}'")
             if manifest["dtypes"][k] == "bfloat16":
                 a = a.view(jax.numpy.bfloat16)
             if tuple(a.shape) != tuple(proto.shape):
@@ -139,3 +206,22 @@ def restore(dirpath: str, step: int, like: Any,
     keys = list(_flatten(like).keys())
     restored = treedef.unflatten([out[k] for k in keys])
     return restored, manifest["meta"]
+
+
+def restore_latest_verified(dirpath: str, like: Any, shardings: Any = None
+                            ) -> Tuple[int, Any, Dict[str, Any]]:
+    """Walk `list_steps` newest-first and return the first checkpoint
+    that restores cleanly (strict checksums), as (step, tree, meta) —
+    the auto-resume entry point after a crash: a corrupt newest shard
+    falls back to the previous good one instead of wedging recovery.
+    Raises `FileNotFoundError` if no checkpoint verifies."""
+    recover(dirpath)
+    for step in reversed(list_steps(dirpath)):
+        try:
+            tree, meta = restore(dirpath, step, like, shardings, strict=True)
+            return step, tree, meta
+        except Exception:
+            # torn zip, checksum mismatch, truncated manifest, ... —
+            # any load failure means "keep walking back"
+            continue
+    raise FileNotFoundError(f"no verifiable checkpoint under {dirpath}")

@@ -163,5 +163,9 @@ class TrainConfig:
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 100
     keep_checkpoints: int = 3
+    # skip the optimizer update when the global grad norm is non-finite
+    # or exceeds this threshold (0.0 = spike skipping disabled; non-finite
+    # grads are still applied as-is when disabled, preserving old behavior)
+    grad_skip_threshold: float = 0.0
     # gradient compression across the pod (DP) axis
     grad_compression: str = "none"     # none | int8

@@ -20,7 +20,7 @@ reschedules work exactly like the 4-mask warp scheduler (§IV-B).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
@@ -104,3 +104,59 @@ class PodMasks:
 
     def fail(self, pod: int) -> None:
         self.active[pod] = False
+
+
+class Fleet:
+    """PodMasks + StragglerPolicy glued into the per-step protocol the
+    fleet train step consumes.
+
+    Each step the launcher reports every pod's barrier wait via
+    `note_waits`; pods past the policy deadline are marked stalled
+    (skipped in the masked-mean reduce), pods that come back rejoin, and
+    a pod that exhausts `max_consecutive_skips` is failed permanently.
+    `healthy()` is the float mask handed to `make_fleet_train_step`.
+    Transitions are counted in an optional obs registry
+    (`fleet.pod_skips`, `fleet.pod_fails`) and the live healthy count is
+    exported as the `fleet.pods_healthy` gauge.
+    """
+
+    def __init__(self, n_pods: int,
+                 policy: Optional[StragglerPolicy] = None,
+                 registry: Any = None):
+        self.masks = PodMasks(n_pods)
+        self.policy = policy or StragglerPolicy()
+        self.metrics = registry
+        self.consecutive = np.zeros(n_pods, np.int32)
+
+    def note_waits(self, waits_s) -> np.ndarray:
+        """Fold one step's per-pod barrier waits into the masks; returns
+        the healthy mask for this step."""
+        waits = np.asarray(waits_s, np.float64)
+        for pod in range(self.masks.n_pods):
+            if not self.masks.active[pod]:
+                continue
+            if self.policy.should_skip(float(waits[pod]),
+                                       int(self.consecutive[pod])):
+                self.masks.mark_straggler(pod)
+                self.consecutive[pod] += 1
+                if self.metrics is not None:
+                    self.metrics.counter("fleet.pod_skips").inc()
+            elif waits[pod] > self.policy.deadline_s:
+                # still late but out of skip budget: the pod is gone
+                self.masks.fail(pod)
+                if self.metrics is not None:
+                    self.metrics.counter("fleet.pod_fails").inc()
+            else:
+                if self.masks.stalled[pod]:
+                    self.masks.rejoin(pod)
+                self.consecutive[pod] = 0
+        healthy = self.healthy()
+        if self.metrics is not None:
+            self.metrics.gauge("fleet.pods_healthy").set(int(healthy.sum()))
+        return healthy
+
+    def healthy(self) -> np.ndarray:
+        return self.masks.healthy().astype(np.float32)
+
+    def n_healthy(self) -> int:
+        return int(self.masks.healthy().sum())

@@ -44,19 +44,35 @@ def main(argv=None) -> int:
                     help="prepend a common N-token prefix to every request")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome/Perfetto trace of the run here")
+    ap.add_argument("--chaos-seed", type=int, default=None, metavar="SEED",
+                    help="inject a seeded fault plan (NaN logits, slow "
+                         "ticks, transient step crashes) to exercise the "
+                         "hardened paths")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request TTL; expired requests finish with "
+                         "reason 'timeout'")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue; overflow is shed")
     args = ap.parse_args(argv)
 
     if args.trace:
         obs.enable_tracing()
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     params = api.build_params(jax.random.PRNGKey(0), cfg)
+    injector = None
+    if args.chaos_seed is not None:
+        from repro import faults
+        injector = faults.FaultInjector(faults.serving_plan(args.chaos_seed))
     eng = Engine(cfg, params, n_slots=args.slots, max_len=args.max_len,
                  sampler=SamplerConfig(temperature=args.temperature,
                                        seed=args.seed),
                  eos_id=-1,
                  prefill_chunk=args.prefill_chunk,
                  prefill_mode=args.prefill_mode,
-                 prefix_cache_entries=args.prefix_cache_entries)
+                 prefix_cache_entries=args.prefix_cache_entries,
+                 faults=injector,
+                 default_deadline_s=args.deadline_s,
+                 max_queue=args.max_queue)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix).tolist()
@@ -80,6 +96,15 @@ def main(argv=None) -> int:
                 "serving.recompiles.prefill_chunk"):
         if key in snap:
             print(f"  {key}: {snap[key].get('value')}", flush=True)
+    if injector is not None:
+        for key, s in sorted(snap.items()):
+            if key.startswith(("serving.requests_completed.",
+                               "serving.watchdog.", "serving.faults.",
+                               "serving.degraded")):
+                print(f"  {key}: {s.get('value')}", flush=True)
+        for key, s in sorted(injector.metrics.snapshot().items()):
+            print(f"  {key}: {s.get('value')}", flush=True)
+        print(f"  faults.remaining: {injector.remaining()}", flush=True)
     if args.trace:
         obs.write_chrome_trace(args.trace, obs.tracer.drain())
         print(f"[trace] wrote {args.trace}", flush=True)

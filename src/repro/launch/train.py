@@ -48,6 +48,15 @@ def main(argv=None) -> int:
                     default="none")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome/Perfetto trace of the run here")
+    ap.add_argument("--chaos-seed", type=int, default=None, metavar="SEED",
+                    help="inject a seeded fault plan (transient step "
+                         "crashes, corrupt checkpoint shards) and run "
+                         "through the recovery loop")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="transient-fault restarts before giving up")
+    ap.add_argument("--grad-skip-threshold", type=float, default=0.0,
+                    help="skip optimizer updates whose global grad norm "
+                         "is non-finite or above this (0 = off)")
     args = ap.parse_args(argv)
     if args.trace:
         obs.enable_tracing()
@@ -56,7 +65,8 @@ def main(argv=None) -> int:
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                      warmup_steps=max(args.steps // 10, 1),
                      microbatch=args.microbatch or None,
-                     grad_compression=args.compression)
+                     grad_compression=args.compression,
+                     grad_skip_threshold=args.grad_skip_threshold)
     shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
                         kind="train")
 
@@ -70,10 +80,16 @@ def main(argv=None) -> int:
     source = SyntheticLM(cfg, shape, seed=tc.seed)
     loader = Loader(source)
 
+    injector = None
+    if args.chaos_seed is not None:
+        from repro import faults
+        injector = faults.FaultInjector(
+            faults.training_plan(args.chaos_seed, horizon=args.steps))
+
     start = 0
     mgr = None
     if args.ckpt:
-        mgr = CheckpointManager(args.ckpt, keep=3)
+        mgr = CheckpointManager(args.ckpt, keep=3, injector=injector)
         if args.restore == "auto":
             got = mgr.restore_latest(state)
             if got is not None:
@@ -82,6 +98,31 @@ def main(argv=None) -> int:
                                         "seed": tc.seed})
                 print(f"[restore] resumed from step {start}", flush=True)
         mgr.install_preemption_flush(lambda: (loader.step, state))
+
+    if injector is not None:
+        # chaos mode: run through the recovery loop (sync checkpoints,
+        # auto-resume from the newest verified checkpoint on crash)
+        from repro.training.resilient import train_with_recovery
+
+        def on_step(step, st, metrics):
+            if step % args.log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                print(f"step {step:5d}  loss {m['loss']:.4f}  "
+                      f"gnorm {m['grad_norm']:.2f}", flush=True)
+
+        with shd.axis_rules(mesh, rules):
+            state, restarts = train_with_recovery(
+                state, step_fn, loader,
+                total_steps=args.steps, start_step=start,
+                manager=mgr, checkpoint_every=args.ckpt_every,
+                injector=injector, max_restarts=args.max_restarts,
+                registry=obs.metrics, on_step=on_step)
+        print(f"[chaos] restarts={restarts} "
+              f"faults_remaining={injector.remaining()}", flush=True)
+        for key, s in sorted(injector.metrics.snapshot().items()):
+            print(f"  {key}: {s.get('value')}", flush=True)
+        print("[done]", flush=True)
+        return 0
 
     ctx = shd.axis_rules(mesh, rules)
     with ctx:

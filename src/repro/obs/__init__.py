@@ -24,7 +24,7 @@ import time
 from typing import Optional
 
 from repro.obs.export import (event_tree, load_chrome_trace, text_summary,
-                              write_chrome_trace)
+                              to_openmetrics, write_chrome_trace)
 from repro.obs.perf import PerfReport
 from repro.obs.registry import (Counter, Gauge, Histogram, Registry, bump,
                                 device_counters, merge_device, metrics)
@@ -35,6 +35,7 @@ __all__ = [
     "device_counters", "bump", "merge_device",
     "Tracer", "trace", "tracer",
     "write_chrome_trace", "load_chrome_trace", "event_tree", "text_summary",
+    "to_openmetrics",
     "PerfReport",
     "enable_tracing", "disable_tracing", "tracing_enabled",
     "enable_kernel_timing", "disable_kernel_timing",

@@ -1,7 +1,8 @@
-"""Trace export: Chrome trace-event JSON (Perfetto-loadable) and a plain
-hierarchical text summary.
+"""Trace/metrics export: Chrome trace-event JSON (Perfetto-loadable), a
+plain hierarchical text summary, and an OpenMetrics text exposition of a
+metrics registry.
 
-The format is the Trace Event Format's JSON-object flavor:
+The trace format is the Trace Event Format's JSON-object flavor:
 ``{"traceEvents": [...], "displayTimeUnit": "ms"}`` with "X" (complete)
 events carrying ``ts``/``dur`` in microseconds.  Load the file at
 https://ui.perfetto.dev or chrome://tracing.
@@ -9,10 +10,11 @@ https://ui.perfetto.dev or chrome://tracing.
 from __future__ import annotations
 
 import json
+import re
 from typing import Any, Dict, List, Optional
 
 __all__ = ["write_chrome_trace", "load_chrome_trace", "event_tree",
-           "text_summary"]
+           "text_summary", "to_openmetrics"]
 
 
 def write_chrome_trace(path: str, events: List[Dict[str, Any]],
@@ -31,6 +33,69 @@ def load_chrome_trace(path: str) -> List[Dict[str, Any]]:
     if isinstance(doc, list):          # array flavor is also legal
         return doc
     return doc["traceEvents"]
+
+
+def _om_name(name: str) -> str:
+    """Registry names are dotted (``serving.tokens``); OpenMetrics names
+    are ``[a-zA-Z_:][a-zA-Z0-9_:]*``.  Dots become underscores and any
+    other illegal character is dropped."""
+    out = re.sub(r"[^a-zA-Z0-9_:]", "_", name.replace(".", "_"))
+    if out and out[0].isdigit():
+        out = "_" + out
+    return out
+
+
+def _om_num(v: Any) -> str:
+    """Stable OpenMetrics number rendering: ints stay integral, floats use
+    repr (shortest round-trip form, deterministic across runs)."""
+    if isinstance(v, bool):
+        return str(int(v))
+    if isinstance(v, int):
+        return str(v)
+    f = float(v)
+    if f != f:
+        return "NaN"
+    if f in (float("inf"), float("-inf")):
+        return "+Inf" if f > 0 else "-Inf"
+    return repr(f)
+
+
+def to_openmetrics(source: Any) -> str:
+    """Render a metrics `Registry` (or its `.snapshot()` dict) in the
+    OpenMetrics text exposition format.
+
+    Counters become ``<name>_total``; gauges expose their last value
+    (unset gauges are skipped); histograms are exported as summaries —
+    ``quantile`` labels from the deterministic reservoir plus
+    ``_count``/``_sum``.  Output is fully deterministic for a given
+    registry state (sorted names, stable number formatting), which is
+    what makes it golden-testable, and ends with the mandatory
+    ``# EOF`` terminator.
+    """
+    snap = source.snapshot() if hasattr(source, "snapshot") else dict(source)
+    lines: List[str] = []
+    for name in sorted(snap):
+        s = snap[name]
+        om = _om_name(name)
+        kind = s.get("type")
+        if kind == "counter":
+            lines.append(f"# TYPE {om} counter")
+            lines.append(f"{om}_total {_om_num(s['value'])}")
+        elif kind == "gauge":
+            if s.get("value") is None:
+                continue
+            lines.append(f"# TYPE {om} gauge")
+            lines.append(f"{om} {_om_num(s['value'])}")
+        elif kind == "histogram":
+            lines.append(f"# TYPE {om} summary")
+            for q, key in (("0.5", "p50"), ("0.9", "p90"), ("0.99", "p99")):
+                if key in s:
+                    lines.append(f'{om}{{quantile="{q}"}} '
+                                 f"{_om_num(s[key])}")
+            lines.append(f"{om}_count {_om_num(s.get('count', 0))}")
+            lines.append(f"{om}_sum {_om_num(s.get('sum', 0.0))}")
+    lines.append("# EOF")
+    return "\n".join(lines) + "\n"
 
 
 def event_tree(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:

@@ -21,6 +21,14 @@ serving benchmark measures speedups against.
 
 Ragged lengths: the cache pool's `len` is a per-slot [B] vector (see
 models/attention.py decode path).
+
+Failure semantics (serving/README.md "Failure semantics"): per-request
+deadlines/TTLs (finish reason "timeout"), a bounded admission queue with
+a shed policy ("shed"), an in-jit NaN/Inf logit guard that degrades to
+greedy sampling ("degraded"), and a watchdog around `step()` that
+retries transient failures with capped exponential backoff.  All hooks
+accept an optional `repro.faults.FaultInjector` and are exact no-ops —
+bit-identical serving — when no faults are injected.
 """
 from __future__ import annotations
 
@@ -35,9 +43,11 @@ import numpy as np
 
 from repro import obs
 from repro.configs.base import ModelConfig
+from repro.faults.plan import FaultInjector, TransientFault
 from repro.models import api
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.sampler import SamplerConfig, logit_entropy, sample
+from repro.serving.sampler import (SamplerConfig, logit_entropy,
+                                   sample_guarded)
 from repro.serving.scheduler import RequestScheduler
 
 
@@ -49,10 +59,13 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
-    finish_reason: str = ""            # "eos" | "max_new" | "max_len"
+    # "eos" | "max_new" | "max_len" | "timeout" | "shed" | "degraded"
+    finish_reason: str = ""
     submit_t: float = 0.0
     first_tok_t: float = 0.0
     last_tok_t: float = 0.0
+    deadline_s: Optional[float] = None   # TTL from submit; None = no deadline
+    degraded: bool = False               # sampled through the NaN/Inf guard
 
 
 class Engine:
@@ -63,11 +76,37 @@ class Engine:
                  eos_id: int = 1,
                  prefill_chunk: int = 32,
                  prefill_mode: str = "auto",
-                 prefix_cache_entries: int = 32):
+                 prefix_cache_entries: int = 32,
+                 faults: Optional[FaultInjector] = None,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject-new",
+                 default_deadline_s: Optional[float] = None,
+                 step_retries: int = 3,
+                 retry_base_s: float = 0.01,
+                 retry_max_s: float = 0.25,
+                 tick_budget_s: Optional[float] = None):
         """prefill_mode: 'chunked' | 'legacy' | 'auto' (chunked when the
         model family supports chunk-append cache writes and the cache
         layout is non-ring).  prefix_cache_entries bounds the LRU pool
-        of KV prefix snapshots; 0 disables prefix caching entirely."""
+        of KV prefix snapshots; 0 disables prefix caching entirely.
+
+        Failure semantics (see serving/README.md):
+          faults              optional FaultInjector; every hook is a
+                              no-op `is not None` check when absent
+          max_queue           bound on the pending admission queue; a
+                              submit beyond it is SHED per `shed_policy`
+                              ("reject-new" sheds the incoming request,
+                              "drop-oldest" sheds the queue head)
+          default_deadline_s  TTL applied to requests submitted without
+                              an explicit deadline; expired requests
+                              finish with reason "timeout"
+          step_retries        watchdog: transient step failures retry up
+                              to this many times with capped exponential
+                              backoff (retry_base_s doubling, capped at
+                              retry_max_s) before re-raising
+          tick_budget_s       ticks slower than this bump the
+                              serving.watchdog.slow_ticks counter
+        """
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -87,6 +126,18 @@ class Engine:
         # changes jit cache behavior
         self.metrics = obs.Registry()
         self._t_start = time.perf_counter()
+        # failure hardening (all off by default — fault-free serving is
+        # bit-identical to the unhardened engine)
+        self.faults = faults
+        self.max_queue = max_queue
+        assert shed_policy in ("reject-new", "drop-oldest")
+        self.shed_policy = shed_policy
+        self.default_deadline_s = default_deadline_s
+        self.step_retries = step_retries
+        self.retry_base_s = retry_base_s
+        self.retry_max_s = retry_max_s
+        self.tick_budget_s = tick_budget_s
+        self._any_deadlines = False
 
         if prefill_mode == "auto":
             ring = (cfg.sliding_window is not None
@@ -161,8 +212,9 @@ class Engine:
         last = jnp.take_along_axis(
             logits, (true_len - 1).reshape(1, 1, 1).astype(jnp.int32),
             axis=1)[:, 0]
-        tok = sample(last, self.cfg.vocab_size, self.sampler, key)
-        return tok, caches
+        tok, bad = sample_guarded(last, self.cfg.vocab_size, self.sampler,
+                                  key)
+        return tok, caches, bad
 
     def _prefill_chunk_step(self, params, caches, tokens, last_idx, key,
                             sel):
@@ -182,26 +234,51 @@ class Engine:
         last = jnp.take_along_axis(
             logits, last_idx.reshape(-1, 1, 1).astype(jnp.int32),
             axis=1)[:, 0]
-        tok = sample(last, self.cfg.vocab_size, self.sampler, key)
-        return tok, self._masked_merge(new_caches, caches, sel)
+        tok, bad = sample_guarded(last, self.cfg.vocab_size, self.sampler,
+                                  key)
+        return tok, self._masked_merge(new_caches, caches, sel), bad
 
-    def _decode_step(self, params, caches, tokens, key, sel):
+    @staticmethod
+    def _apply_logit_fault(last, fault_code):
+        """In-jit fault injection: 0 = identity (the `where` on a traced
+        scalar selects `last` verbatim — fault-free serving stays
+        bit-identical), 1 = all-NaN, 2 = all-Inf.  A traced int32 arg,
+        so injecting never changes the jit cache shape."""
+        nanv = jnp.full_like(last, jnp.nan)
+        infv = jnp.full_like(last, jnp.inf)
+        return jnp.where(fault_code == 1, nanv,
+                         jnp.where(fault_code == 2, infv, last))
+
+    def _decode_step(self, params, caches, tokens, key, sel, fault_code):
         logits, _aux, new_caches = api.forward(
             params, {"tokens": tokens[:, None]}, self.cfg, mode="decode",
             caches=caches, remat="none")
-        last = logits[:, -1]
-        tok = sample(last, self.cfg.vocab_size, self.sampler, key)
+        last = self._apply_logit_fault(logits[:, -1], fault_code)
+        # NaN/Inf guard: rows with any non-finite logit fall back to
+        # greedy over sanitized logits instead of emitting garbage
+        tok, bad = sample_guarded(last, self.cfg.vocab_size, self.sampler,
+                                  key)
         # jit-safe device counters (obs.registry pattern): merged into
         # the host registry once per tick after the step returns
-        ctrs = obs.device_counters("sampled_tokens", "eos_sampled")
+        ctrs = obs.device_counters("sampled_tokens", "eos_sampled",
+                                   "nonfinite_logit_rows")
         ctrs = obs.bump(ctrs, sampled_tokens=tok.shape[0],
-                        eos_sampled=jnp.sum(tok == self.eos_id))
+                        eos_sampled=jnp.sum(tok == self.eos_id),
+                        nonfinite_logit_rows=jnp.sum(bad & sel))
         ent = jnp.mean(logit_entropy(last, self.cfg.vocab_size))
-        return tok, self._masked_merge(new_caches, caches, sel), ctrs, ent
+        return (tok, self._masked_merge(new_caches, caches, sel), ctrs, ent,
+                bad)
 
     # ------------------------------------------------------------- requests
 
-    def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
+    def submit(self, prompt: Sequence[int], max_new: int = 32,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a request.  `deadline_s` is a TTL from now (falls back
+        to the engine's `default_deadline_s`); a request that exceeds it
+        — queued or running — finishes with reason "timeout".  When the
+        admission queue is bounded (`max_queue`) and full, the shed
+        policy finishes a request immediately with reason "shed" instead
+        of letting the queue grow without bound."""
         prompt = list(prompt)
         if not prompt or len(prompt) >= self.max_len:
             raise ValueError(
@@ -209,10 +286,22 @@ class Engine:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new=max_new,
-                      submit_t=time.perf_counter())
+                      submit_t=time.perf_counter(),
+                      deadline_s=(deadline_s if deadline_s is not None
+                                  else self.default_deadline_s))
         self.requests[rid] = req
-        self.pending.append(req)
+        if req.deadline_s is not None:
+            self._any_deadlines = True
         self.metrics.counter("serving.requests_submitted").inc()
+        if (self.max_queue is not None
+                and len(self.pending) >= self.max_queue):
+            if self.shed_policy == "drop-oldest":
+                self._finish(self.pending.popleft(), "shed")
+                self.pending.append(req)
+            else:                               # reject-new
+                self._finish(req, "shed")
+            return rid
+        self.pending.append(req)
         return rid
 
     # -------------------------------------------------------- cache surgery
@@ -339,19 +428,50 @@ class Engine:
     # ----------------------------------------------------------------- tick
 
     def _finish(self, req: Request, reason: str) -> None:
+        # a request that ever sampled through the NaN/Inf guard completes
+        # as "degraded" — the tokens are usable (greedy fallback) but the
+        # caller must know they were produced under a fault
+        if req.degraded and reason in ("eos", "max_new", "max_len"):
+            reason = "degraded"
         req.done = True
         req.finish_reason = reason
-        self.sched.retire(req.slot)
-        # drop the engine's slot->request pin: retired requests must not
-        # stay reachable from the engine for its whole lifetime
-        self._slot_req.pop(req.slot, None)
-        self._prefill_pos.pop(req.slot, None)
-        self._chunk_hashes.pop(req.slot, None)
+        if req.slot >= 0:
+            self.sched.retire(req.slot)
+            # drop the engine's slot->request pin: retired requests must
+            # not stay reachable from the engine for its whole lifetime
+            self._slot_req.pop(req.slot, None)
+            self._prefill_pos.pop(req.slot, None)
+            self._chunk_hashes.pop(req.slot, None)
         self.metrics.counter("serving.requests_completed").inc()
         self.metrics.counter(f"serving.requests_completed.{reason}").inc()
         if req.submit_t:
             self.metrics.histogram("serving.request_latency_s").observe(
                 time.perf_counter() - req.submit_t)
+
+    def _enforce_deadlines(self) -> None:
+        """Time out queued and running requests past their TTL.  Queued
+        expirations leave the deque; running ones retire their slot (the
+        warp analogue: a lane that exceeds its budget is masked off so
+        the rest of the machine keeps issuing)."""
+        if not self._any_deadlines:
+            return
+        now = time.perf_counter()
+
+        def expired(r: Request) -> bool:
+            return (r.deadline_s is not None
+                    and now - r.submit_t > r.deadline_s)
+
+        if any(expired(r) for r in self.pending):
+            keep: Deque[Request] = deque()
+            for r in self.pending:
+                if expired(r):
+                    self._finish(r, "timeout")
+                else:
+                    keep.append(r)
+            self.pending = keep
+        for req in list(self._slot_req.values()):
+            if expired(req):
+                self._finish(req, "timeout")
 
     def _begin_prefill_batch(self, admitted) -> None:
         """Admission-time prefix-cache lookup for a whole admission wave:
@@ -444,10 +564,11 @@ class Engine:
         sel[targets] = True
         self._key, k = jax.random.split(self._key)
         with obs.trace.span("prefill_chunk", n=int(len(targets))):
-            tok, self.caches = self._chunk_fn(
+            tok, self.caches, bad = self._chunk_fn(
                 self.params, self.caches, jnp.asarray(toks),
                 jnp.asarray(last_idx), k, jnp.asarray(sel))
             tok_np = np.asarray(tok)
+            bad_np = np.asarray(bad)
         m.counter("serving.prefill_chunk_calls").inc()
         m.counter("serving.prefill_chunks").inc(int(len(targets)))
         m.histogram("serving.prefill_batch_width").observe(len(targets))
@@ -459,6 +580,9 @@ class Engine:
             self.lens[slot] = pos_new
             self.sched.prefill_step(slot)
             if pos_new >= len(req.prompt):
+                if bool(bad_np[slot]):
+                    req.degraded = True
+                    m.counter("serving.degraded_samples").inc()
                 self._finish_slot_prefill(slot, req, int(tok_np[slot]))
         # one authoritative host->device len write per tick: targets got
         # their cursors advanced, finished slots their true prompt length
@@ -480,16 +604,55 @@ class Engine:
             toks[0, :L] = req.prompt
             self._key, k = jax.random.split(self._key)
             with obs.trace.span("prefill", rid=req.rid, len=L, bucket=buck):
-                tok, one = self._prefill_fn(self.params, jnp.asarray(toks),
-                                            jnp.asarray([L], jnp.int32), k)
+                tok, one, bad = self._prefill_fn(self.params,
+                                                 jnp.asarray(toks),
+                                                 jnp.asarray([L], jnp.int32),
+                                                 k)
                 self._write_slot(slot, one, L)
                 t = int(tok[0])
+            if bool(np.asarray(bad)[0]):
+                req.degraded = True
+                m.counter("serving.degraded_samples").inc()
             self.sched.prefill_step(slot)
             self._finish_slot_prefill(slot, req, t)
 
     def step(self) -> int:
-        """One engine tick: admit -> prefill -> decode.  Returns number of
-        *decode* tokens produced this tick.
+        """One engine tick with a watchdog: transient failures (the
+        injectable `TransientFault` class — flaky collectives, preempted
+        devices) retry with capped exponential backoff up to
+        `step_retries` times before propagating.  The injected check
+        fires BEFORE any tick mutation, so a retried tick replays
+        cleanly.  Slow ticks (wall time over `tick_budget_s`) are
+        counted but never retried — latency is handled by deadlines, not
+        by re-running work."""
+        m = self.metrics
+        attempt = 0
+        while True:
+            t_tick = time.perf_counter()
+            try:
+                if self.faults is not None:
+                    self.faults.check_raise("serving.step")
+                produced = self._step_inner()
+            except TransientFault:
+                m.counter("serving.watchdog.transient_faults").inc()
+                if attempt >= self.step_retries:
+                    m.counter("serving.watchdog.gave_up").inc()
+                    raise
+                delay = min(self.retry_base_s * (2 ** attempt),
+                            self.retry_max_s)
+                m.counter("serving.watchdog.retries").inc()
+                time.sleep(delay)
+                attempt += 1
+                continue
+            dt = time.perf_counter() - t_tick
+            m.histogram("serving.tick_s").observe(dt)
+            if self.tick_budget_s is not None and dt > self.tick_budget_s:
+                m.counter("serving.watchdog.slow_ticks").inc()
+            return produced
+
+    def _step_inner(self) -> int:
+        """One engine tick: time out -> admit -> prefill -> decode.
+        Returns number of *decode* tokens produced this tick.
 
         Token-count contract: `max_new` is the number of *decode* tokens
         generated after prefill.  The prefill pass itself samples one
@@ -500,6 +663,9 @@ class Engine:
         ended one decode token early.)
         """
         m = self.metrics
+        # 0. deadline sweep: expired requests (queued or running) finish
+        # as "timeout" and free their slots before admission
+        self._enforce_deadlines()
         # 1. admission (slots are warps; wspawn) — batched, so prefix
         # copies for a wave sharing one entry coalesce into one write
         admitted = []
@@ -520,6 +686,11 @@ class Engine:
         # 2. prefill stalled slots (memory-wait analogue): chunked slots
         # stay stalled-but-progressing across ticks; legacy slots fill in
         # one blocking call each
+        if self.faults is not None:
+            d = self.faults.delay_s("serving.prefill")
+            if d:
+                m.counter("serving.faults.delayed_prefill_ticks").inc()
+                time.sleep(d)
         if self.prefill_mode == "chunked":
             self._prefill_tick_chunked()
         else:
@@ -541,14 +712,28 @@ class Engine:
         m.gauge("serving.decode_batch_efficiency").set(
             len(picked) / self.n_slots)
         # lanes not selected decode too (masked); their state is restored
+        fault_code = 0
+        if self.faults is not None:
+            d = self.faults.delay_s("serving.decode")
+            if d:
+                m.counter("serving.faults.delayed_decode_ticks").inc()
+                time.sleep(d)
+            fault_code = self.faults.logit_fault_code("serving.logits")
         self._key, k = jax.random.split(self._key)
         toks = jnp.asarray(self.last_tok)
         with obs.trace.span("decode_tick", n=len(picked)):
-            new_tok, self.caches, dev_ctrs, ent = self._decode_fn(
-                self.params, self.caches, toks, k, jnp.asarray(sel))
+            new_tok, self.caches, dev_ctrs, ent, bad = self._decode_fn(
+                self.params, self.caches, toks, k, jnp.asarray(sel),
+                jnp.int32(fault_code))
             toks_np = np.asarray(new_tok)
+            bad_np = np.asarray(bad)
         obs.merge_device(m, dev_ctrs, prefix="serving.decode.")
-        m.histogram("serving.decode.logit_entropy").observe(float(ent))
+        ent = float(ent)
+        if np.isfinite(ent):     # a faulted tick's entropy is NaN/Inf —
+            # keep it out of the histogram so healthy-traffic stats stay
+            # meaningful; the fault itself is counted via
+            # serving.decode.nonfinite_logit_rows
+            m.histogram("serving.decode.logit_entropy").observe(ent)
         self._note_recompiles()
 
         produced = 0
@@ -556,6 +741,9 @@ class Engine:
         for slot in picked:
             req = self._slot_req[slot]
             t = int(toks_np[slot])
+            if bool(bad_np[slot]):
+                req.degraded = True
+                m.counter("serving.degraded_samples").inc()
             req.out.append(t)
             if req.last_tok_t:
                 m.histogram("serving.itl_s").observe(now - req.last_tok_t)

@@ -33,6 +33,30 @@ def sample(logits: jax.Array, vocab_size: int, cfg: SamplerConfig,
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
 
 
+def sample_guarded(logits: jax.Array, vocab_size: int, cfg: SamplerConfig,
+                   key: Optional[jax.Array] = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """`sample` with an in-jit NaN/Inf guard: rows containing any
+    non-finite logit fall back to GREEDY over sanitized logits (every
+    non-finite entry clamped to -1e30) instead of emitting garbage
+    tokens.  Returns (tokens [B], bad_rows [B] bool).
+
+    Rows whose logits are all finite take the exact `sample` result —
+    bit-identical to the unguarded path — so the guard is free on
+    healthy traffic and the serving contract tests keep passing."""
+    lf = logits.astype(jnp.float32)
+    finite = jnp.isfinite(lf)
+    bad = ~jnp.all(finite, axis=-1)
+    clean = jnp.where(finite, lf, -1e30)
+    vp = clean.shape[-1]
+    if vp > vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0)
+        clean = jnp.where(col < vocab_size, clean, -1e30)
+    greedy = jnp.argmax(clean, axis=-1).astype(jnp.int32)
+    tok = sample(logits, vocab_size, cfg, key)
+    return jnp.where(bad, greedy, tok), bad
+
+
 def logit_entropy(logits: jax.Array, vocab_size: int) -> jax.Array:
     """Shannon entropy (nats) of softmax(logits) per row, padded vocab
     excluded.  logits: [B, Vp] -> [B] fp32.  jit-safe — the serving

@@ -74,14 +74,9 @@ def _split_batch(batch: Dict[str, Any], n_mb: int) -> Dict[str, Any]:
     return jax.tree.map(sp, batch)
 
 
-def make_train_step(cfg: ModelConfig, tc: TrainConfig, *, tp: int = 1,
-                    global_batch: Optional[int] = None):
-    """Returns train_step(state, batch) -> (state, metrics).
-
-    If tc.microbatch is set and divides the global batch, gradients are
-    accumulated over global_batch // microbatch scan steps (activation
-    memory scales with the microbatch, not the global batch).
-    """
+def _make_accumulate(cfg: ModelConfig, tc: TrainConfig, tp: int):
+    """Build the grad-accumulation closure shared by the single-pod and
+    fleet train-step factories."""
 
     def loss_fn(params, mb):
         logits, aux, _ = api.forward(params, mb, cfg, tp=tp, mode="train",
@@ -115,17 +110,78 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, *, tp: int = 1,
         (grads, sums), _ = jax.lax.scan(step, (g0, jnp.zeros(3)), mbs)
         return grads, {"loss": sums[0], "ce": sums[1], "aux": sums[2]}
 
+    return accumulate
+
+
+def _apply_update(state: TrainState, grads, metrics: Dict,
+                  tc: TrainConfig) -> Tuple[TrainState, Dict]:
+    """Optimizer update with optional compression and grad-spike skip.
+
+    When tc.grad_skip_threshold > 0, a step whose global grad norm is
+    non-finite or above the threshold is dropped in-jit: the returned
+    state is the (bitwise) old state and `grad_skipped` is 1.  The
+    select runs on every step but costs a fused where — the fault-free
+    path stays one compiled program."""
+    err = state.err
+    if tc.grad_compression == "int8":
+        grads, err = compression.int8_compress_decompress(grads, err)
+    params, opt, om = opt_mod.adamw_update(state.params, grads,
+                                           state.opt, tc)
+    new_state = TrainState(params=params, opt=opt, err=err)
+    metrics.update(om)
+    if tc.grad_skip_threshold:
+        gnorm = om["grad_norm"]
+        ok = jnp.isfinite(gnorm) & (gnorm <= tc.grad_skip_threshold)
+        new_state = jax.tree.map(lambda new, old: jnp.where(ok, new, old),
+                                 new_state, state)
+        metrics["grad_skipped"] = (~ok).astype(jnp.int32)
+    return new_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, *, tp: int = 1,
+                    global_batch: Optional[int] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    If tc.microbatch is set and divides the global batch, gradients are
+    accumulated over global_batch // microbatch scan steps (activation
+    memory scales with the microbatch, not the global batch).
+    """
+    accumulate = _make_accumulate(cfg, tc, tp)
+
     def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
         grads, metrics = accumulate(state.params, batch)
-        err = state.err
-        if tc.grad_compression == "int8":
-            grads, err = compression.int8_compress_decompress(grads, err)
-        params, opt, om = opt_mod.adamw_update(state.params, grads,
-                                               state.opt, tc)
-        metrics.update(om)
-        return TrainState(params=params, opt=opt, err=err), metrics
+        return _apply_update(state, grads, metrics, tc)
 
     return train_step
+
+
+def make_fleet_train_step(cfg: ModelConfig, tc: TrainConfig, *,
+                          n_pods: int, tp: int = 1):
+    """Returns fleet_step(state, batch, healthy) -> (state, metrics).
+
+    `batch` leaves are pod-sharded [n_pods, B/n_pods, ...]; `healthy` is
+    a [n_pods] mask (float or bool).  Per-pod gradients are reduced with
+    a masked mean over healthy pods — a stalled or failed pod's
+    contribution is excluded without changing the program shape, exactly
+    the Vortex thread-mask trick applied to pods.  When no pod is
+    healthy the step degenerates to zero gradients (state unchanged up
+    to weight decay), which the caller should treat as a stall.
+    """
+    accumulate = _make_accumulate(cfg, tc, tp)
+
+    def fleet_step(state: TrainState, batch, healthy
+                   ) -> Tuple[TrainState, Dict]:
+        pod_grads, pod_metrics = jax.vmap(
+            lambda b: accumulate(state.params, b))(batch)
+        w = healthy.astype(jnp.float32)
+        w = w / jnp.maximum(jnp.sum(w), 1.0)
+        grads = jax.tree.map(
+            lambda g: jnp.tensordot(w, g, axes=1), pod_grads)
+        metrics = {k: jnp.sum(w * v) for k, v in pod_metrics.items()}
+        metrics["pods_healthy"] = jnp.sum(healthy.astype(jnp.int32))
+        return _apply_update(state, grads, metrics, tc)
+
+    return fleet_step
 
 
 def donate_argnums_for_train_step() -> Tuple[int, ...]:
@@ -152,6 +208,10 @@ def record_step_metrics(registry, metrics: Dict[str, Any], *,
         registry.gauge("train.grad_norm").set(float(metrics["grad_norm"]))
     if "lr" in metrics:
         registry.gauge("train.lr").set(float(metrics["lr"]))
+    if int(metrics.get("grad_skipped", 0)):
+        registry.counter("train.grad_skips").inc()
+    if "pods_healthy" in metrics:
+        registry.gauge("fleet.pods_healthy").set(int(metrics["pods_healthy"]))
     registry.histogram("train.step_time_s").observe(dt)
     registry.counter("train.steps").inc()
     registry.counter("train.tokens").inc(tokens)

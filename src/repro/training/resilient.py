@@ -1,0 +1,126 @@
+"""Failure-hardened training driver: the train loop wrapped in a
+watchdog that survives transient step crashes by restoring the newest
+*verified* checkpoint and rewinding the data cursor.
+
+Recovery contract:
+
+  * a `TransientFault` (injected, or raised by a flaky collective
+    wrapper) triggers a capped-exponential-backoff restart;
+  * restart restores via `CheckpointManager.restore_latest`, which walks
+    newest -> oldest past corrupt/torn checkpoints (store checksums), so
+    a crash that also corrupted the latest shard still recovers — at the
+    cost of one extra save interval;
+  * the data pipeline is (seed, step)-addressed, so the rewind is a
+    cursor assignment — no data is replayed into the optimizer twice,
+    because the restored state is from before those batches;
+  * faults fire exactly once (FaultInjector pop semantics), so replayed
+    steps after a recovery do not re-crash;
+  * with a `Fleet`, scheduled pod faults become barrier waits: stalled
+    pods drop out of the masked-mean gradient reduce and rejoin later,
+    failed pods leave permanently.
+
+Everything is counted: `train.recoveries`, `train.recovery.restarts`,
+`faults.injected.*` (injector registry), `fleet.pod_skips/pod_fails`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.faults.plan import FaultInjector, TransientFault
+from repro.training.loop import TrainState, _split_batch
+
+
+def _pod_waits(injector: FaultInjector, fleet) -> np.ndarray:
+    """Convert this step's scheduled pod faults into barrier waits (a
+    stalled pod reports a wait past the policy deadline) and permanent
+    failures."""
+    n = fleet.masks.n_pods
+    waits = np.zeros(n, np.float64)
+    for f in injector.poll("pod"):
+        pod = int(f.arg) % n
+        if f.kind == "pod_stall":
+            waits[pod] = fleet.policy.deadline_s + 1.0
+        elif f.kind == "pod_fail":
+            fleet.masks.fail(pod)
+    return waits
+
+
+def train_with_recovery(
+    state: TrainState,
+    step_fn: Callable,
+    loader,
+    *,
+    total_steps: int,
+    start_step: int = 0,
+    manager=None,
+    checkpoint_every: int = 0,
+    injector: Optional[FaultInjector] = None,
+    fleet=None,
+    max_restarts: int = 3,
+    backoff_base_s: float = 0.01,
+    backoff_max_s: float = 0.5,
+    registry=None,
+    on_step: Optional[Callable[[int, TrainState, Dict], None]] = None,
+) -> Tuple[TrainState, int]:
+    """Run `step_fn` from `start_step` to `total_steps`, recovering from
+    `TransientFault`s.  Returns (final_state, restarts_used).
+
+    `step_fn(state, batch) -> (state, metrics)`; with `fleet` set the
+    signature is `step_fn(state, pod_batch, healthy)` (the fleet step
+    from `make_fleet_train_step`) and batches are pod-split here.
+    `on_step(step_1based, state, metrics)` runs after every successful
+    step (logging / cadence hooks).
+    """
+    step = start_step
+    restarts = 0
+    while step < total_steps:
+        try:
+            if injector is not None:
+                if fleet is not None:
+                    fleet.note_waits(_pod_waits(injector, fleet))
+                # fires AFTER pod bookkeeping, BEFORE the loader advances,
+                # so a recovery replays this step's batch exactly
+                injector.check_raise("train.step")
+            batch = next(loader)
+            if fleet is not None:
+                pod_batch = _split_batch(batch, fleet.masks.n_pods)
+                healthy = np.asarray(fleet.healthy(), np.float32)
+                state, metrics = step_fn(state, pod_batch, healthy)
+            else:
+                state, metrics = step_fn(state, batch)
+            step += 1
+            if on_step is not None:
+                on_step(step, state, metrics)
+            if registry is not None:
+                if int(metrics.get("grad_skipped", 0)):
+                    registry.counter("train.grad_skips").inc()
+                registry.counter("train.steps").inc()
+            if (manager is not None and checkpoint_every
+                    and step % checkpoint_every == 0):
+                manager.save(step, state, {"data_step": loader.step})
+        except TransientFault:
+            restarts += 1
+            if registry is not None:
+                registry.counter("train.recoveries").inc()
+                registry.gauge("train.recovery.restarts").set(restarts)
+            if restarts > max_restarts:
+                raise
+            time.sleep(min(backoff_base_s * (2 ** (restarts - 1)),
+                           backoff_max_s))
+            got = manager.restore_latest(state) if manager is not None \
+                else None
+            if got is not None:
+                step, state, meta = got
+                loader.load_state_dict(
+                    {"step": meta.get("data_step", step),
+                     "seed": loader.source.seed})
+            # no verified checkpoint: the fault fired before the step
+            # mutated state, so continuing in-memory is safe
+    if manager is not None and checkpoint_every:
+        manager.wait()
+        if step % checkpoint_every:
+            manager.save(step, state, {"data_step": loader.step})
+    return state, restarts

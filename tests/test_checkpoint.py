@@ -76,3 +76,46 @@ def test_mesh_agnostic_restore_shapes(tmp_path):
     for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
+
+
+def test_overwrite_save_never_destroys_previous(tmp_path, monkeypatch):
+    """Regression: save() used to rmtree the existing checkpoint before
+    renaming the tmp dir in — a crash in that window destroyed the only
+    good checkpoint.  Now the old dir is renamed aside, so a crash at
+    the worst moment still leaves a complete, verifiable checkpoint."""
+    t1, t2 = tree(1), tree(2)
+    store.save(str(tmp_path), 4, t1)
+    real_rename = os.rename
+    calls = {"n": 0}
+
+    def crash_on_first_rename(src, dst):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("killed mid-save")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(os, "rename", crash_on_first_rename)
+    try:
+        store.save(str(tmp_path), 4, t2)
+    except OSError:
+        pass
+    monkeypatch.setattr(os, "rename", real_rename)
+    store.recover(str(tmp_path))
+    assert store.list_steps(str(tmp_path)) == [4]
+    step, got, _ = store.restore_latest_verified(str(tmp_path), t1)
+    assert step == 4
+
+
+def test_restore_strict_flags_corruption(tmp_path):
+    t = tree()
+    store.save(str(tmp_path), 2, t)
+    p = os.path.join(str(tmp_path), "step_00000002", "arrays.npz")
+    with open(p, "r+b") as f:
+        f.seek(200)
+        f.write(b"\x13\x37\x13\x37")
+    try:
+        store.restore(str(tmp_path), 2, t)          # strict by default
+    except Exception:
+        pass
+    else:
+        raise AssertionError("corrupt restore must not succeed silently")

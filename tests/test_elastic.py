@@ -1,0 +1,90 @@
+"""Elastic fleet machinery: straggler policy boundaries, pod masks,
+rescale planning."""
+import numpy as np
+import pytest
+
+from repro.distributed.elastic import (Fleet, PodMasks, RescalePlan,
+                                       StragglerPolicy)
+
+
+# ---------------------------------------------------------------------------
+# StragglerPolicy.should_skip boundaries
+# ---------------------------------------------------------------------------
+
+def test_should_skip_requires_strictly_late():
+    p = StragglerPolicy(deadline_s=30.0, max_consecutive_skips=5)
+    assert not p.should_skip(29.9, 0)
+    assert not p.should_skip(30.0, 0)       # exactly at deadline: not late
+    assert p.should_skip(30.0001, 0)
+
+
+def test_should_skip_exhausts_budget():
+    p = StragglerPolicy(deadline_s=1.0, max_consecutive_skips=3)
+    assert p.should_skip(2.0, 0)
+    assert p.should_skip(2.0, 2)
+    assert not p.should_skip(2.0, 3)        # budget spent: no more skips
+    assert not p.should_skip(2.0, 4)
+
+
+def test_rejoin_cursor_is_fleet_step():
+    assert StragglerPolicy().rejoin_cursor(123) == 123
+
+
+# ---------------------------------------------------------------------------
+# PodMasks transitions
+# ---------------------------------------------------------------------------
+
+def test_pod_masks_transitions():
+    m = PodMasks(4)
+    assert m.healthy().sum() == 4
+    m.mark_straggler(1)
+    assert list(m.healthy()) == [True, False, True, True]
+    m.rejoin(1)
+    assert m.healthy().sum() == 4
+    m.fail(2)
+    assert list(m.healthy()) == [True, True, False, True]
+    m.rejoin(2)                             # rejoin clears stalled only
+    assert list(m.healthy()) == [True, True, False, True]
+    m.barrier[0] = True
+    assert list(m.healthy()) == [False, True, False, True]
+
+
+def test_fleet_fails_pod_past_skip_budget():
+    fleet = Fleet(2, policy=StragglerPolicy(deadline_s=1.0,
+                                            max_consecutive_skips=2))
+    late = np.asarray([5.0, 0.0])
+    for _ in range(2):                      # two skips allowed
+        healthy = fleet.note_waits(late)
+        assert list(healthy) == [0.0, 1.0]
+        assert fleet.masks.active[0]
+    fleet.note_waits(late)                  # budget spent -> permanent fail
+    assert not fleet.masks.active[0]
+    assert fleet.n_healthy() == 1
+    # a failed pod never comes back, even if its waits recover
+    fleet.note_waits(np.zeros(2))
+    assert not fleet.masks.active[0]
+
+
+def test_fleet_straggler_rejoins_and_resets_budget():
+    fleet = Fleet(2, policy=StragglerPolicy(deadline_s=1.0,
+                                            max_consecutive_skips=2))
+    fleet.note_waits(np.asarray([5.0, 0.0]))
+    assert fleet.masks.stalled[0]
+    fleet.note_waits(np.zeros(2))
+    assert not fleet.masks.stalled[0]
+    assert fleet.consecutive[0] == 0        # consecutive counter reset
+
+
+# ---------------------------------------------------------------------------
+# plan_rescale divisibility
+# ---------------------------------------------------------------------------
+
+def test_rescale_plan_validates_divisibility():
+    plan = RescalePlan(old_shape=(16, 16), new_shape=(2, 16, 16),
+                       global_batch=256)
+    plan.validate()                         # 256 % 32 == 0
+    bad = RescalePlan(old_shape=(16, 16), new_shape=(3, 16, 16),
+                      global_batch=256)
+    with pytest.raises(ValueError, match="not divisible"):
+        bad.validate()
+    assert bad.dp_old == 16 and bad.dp_new == 48

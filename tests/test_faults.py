@@ -1,0 +1,337 @@
+"""Chaos suite: deterministic fault injection through serving, checkpoint,
+and training, and the recovery behavior each fault class must produce."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.checkpoint import store
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import TrainConfig, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import Loader, SyntheticLM
+from repro.distributed.elastic import Fleet, StragglerPolicy
+from repro.faults import (Fault, FaultInjector, FaultPlan, TransientFault,
+                          corrupt_checkpoint, serving_plan)
+from repro.models import api
+from repro.serving.engine import Engine
+from repro.training import loop as tl
+from repro.training.resilient import train_with_recovery
+
+CFG = reduced_config("phi3-mini-3.8b").replace(num_layers=2)
+PARAMS = api.build_params(jax.random.PRNGKey(0), CFG)
+PROMPTS = [[5, 9, 2], [7, 1], [3, 3, 3, 3]]
+
+
+def run_engine(injector=None, prompts=PROMPTS, max_new=4, **kw):
+    eng = Engine(CFG, PARAMS, n_slots=2, max_len=64, prompt_bucket=8,
+                 eos_id=-1, faults=injector, **kw)
+    rids = [eng.submit(p, max_new=max_new) for p in prompts]
+    eng.run()
+    return eng, rids
+
+
+# ---------------------------------------------------------------------------
+# plan determinism
+# ---------------------------------------------------------------------------
+
+def test_plan_same_seed_identical_schedule():
+    rates = {("serving.logits", "nan_logits"): 0.3,
+             ("train.step", "exception"): 0.2,
+             ("pod", "pod_stall"): 0.25}
+    a = FaultPlan.generate(11, horizon=128, rates=rates, n_pods=4)
+    flipped = dict(reversed(rates.items()))
+    b = FaultPlan.generate(11, horizon=128, rates=flipped, n_pods=4)
+    assert a == b and a.schedule() == b.schedule() and len(a) > 0
+    c = FaultPlan.generate(12, horizon=128, rates=rates, n_pods=4)
+    assert a != c
+
+
+def test_injector_cursor_and_pop_once():
+    plan = FaultPlan([Fault("s", 2, "exception"), Fault("s", 2, "slow", 0.1)])
+    inj = FaultInjector(plan)
+    assert inj.poll("s") == [] and inj.poll("s") == []
+    fired = inj.poll("s")
+    assert sorted(f.kind for f in fired) == ["exception", "slow"]
+    assert inj.remaining() == 0
+    # replaying the same tick index after a recovery must NOT re-fire
+    inj._cursor["s"] = 2
+    assert inj.poll("s") == []
+    assert inj.metrics.snapshot()["faults.injected"]["value"] == 2
+
+
+# ---------------------------------------------------------------------------
+# serving fault classes
+# ---------------------------------------------------------------------------
+
+def test_nan_logits_degrade_not_crash():
+    # decode tick 0 NaN, tick 1 Inf: requests finish, marked degraded
+    inj = FaultInjector(FaultPlan([Fault("serving.logits", 0, "nan_logits"),
+                                   Fault("serving.logits", 1, "inf_logits")]))
+    eng, rids = run_engine(inj)
+    snap = eng.metrics_snapshot()
+    assert snap["serving.degraded_samples"]["value"] >= 2
+    assert snap["serving.requests_completed.degraded"]["value"] >= 1
+    assert snap["serving.decode.nonfinite_logit_rows"]["value"] >= 2
+    for rid in rids:
+        out = eng.requests[rid].out
+        assert len(out) == 5
+        assert all(0 <= t < CFG.vocab_size for t in out)
+    assert inj.remaining() == 0
+
+
+def test_hung_tick_and_deadline_timeout():
+    inj = FaultInjector(FaultPlan([Fault("serving.decode", 0, "hang", 0.2)]))
+    eng = Engine(CFG, PARAMS, n_slots=2, max_len=64, prompt_bucket=8,
+                 eos_id=-1, faults=inj, tick_budget_s=0.05)
+    a = eng.submit([5, 9, 2], max_new=8)
+    b = eng.submit([7, 1], max_new=8, deadline_s=0.05)
+    eng.run()
+    snap = eng.metrics_snapshot()
+    assert snap["serving.faults.delayed_decode_ticks"]["value"] >= 1
+    assert snap["serving.watchdog.slow_ticks"]["value"] >= 1
+    assert eng.requests[b].finish_reason == "timeout"
+    assert snap["serving.requests_completed.timeout"]["value"] == 1
+    assert eng.requests[a].finish_reason == "max_new"
+
+
+def test_bounded_queue_sheds():
+    eng = Engine(CFG, PARAMS, n_slots=1, max_len=64, prompt_bucket=8,
+                 eos_id=-1, max_queue=2, shed_policy="reject-new")
+    rids = [eng.submit(p, max_new=2) for p in
+            [[1, 2], [3, 4], [5, 6], [7, 8], [9, 10]]]
+    shed = [r for r in rids if eng.requests[r].finish_reason == "shed"]
+    assert len(shed) >= 1
+    eng.run()
+    snap = eng.metrics_snapshot()
+    assert snap["serving.requests_completed.shed"]["value"] == len(shed)
+    for r in rids:
+        if r not in shed:
+            assert eng.requests[r].finish_reason == "max_new"
+
+
+def test_transient_step_fault_retries_same_output():
+    ref, ref_ids = run_engine(None)
+    inj = FaultInjector(FaultPlan([Fault("serving.step", 1, "exception"),
+                                   Fault("serving.step", 3, "exception")]))
+    eng, rids = run_engine(inj, retry_base_s=0.001, retry_max_s=0.002)
+    snap = eng.metrics_snapshot()
+    assert snap["serving.watchdog.transient_faults"]["value"] == 2
+    assert snap["serving.watchdog.retries"]["value"] == 2
+    for a, b in zip(ref_ids, rids):
+        assert ref.requests[a].out == eng.requests[b].out
+        assert eng.requests[b].finish_reason == "max_new"
+
+
+def test_watchdog_gives_up_after_retry_budget():
+    # consecutive poll indices: the retry chain inside one step() call
+    # hits a fresh fault on every attempt until the budget is spent
+    inj = FaultInjector(FaultPlan(
+        [Fault("serving.step", t, "exception") for t in (1, 2, 3)]))
+    eng = Engine(CFG, PARAMS, n_slots=2, max_len=64, prompt_bucket=8,
+                 eos_id=-1, faults=inj, step_retries=2,
+                 retry_base_s=0.001, retry_max_s=0.002)
+    eng.submit([5, 9, 2], max_new=8)
+    with pytest.raises(TransientFault):
+        eng.run()
+    assert eng.metrics_snapshot()["serving.watchdog.gave_up"]["value"] == 1
+
+
+def test_fault_free_plan_bit_identical_to_no_injector():
+    ref, ref_ids = run_engine(None)
+    inj = FaultInjector(FaultPlan())          # hooks active, zero faults
+    eng, rids = run_engine(inj)
+    for a, b in zip(ref_ids, rids):
+        assert ref.requests[a].out == eng.requests[b].out
+        assert ref.requests[a].finish_reason == eng.requests[b].finish_reason
+    assert "serving.degraded_samples" not in eng.metrics_snapshot()
+
+
+def test_serving_plan_replay_determinism():
+    assert serving_plan(123).schedule() == serving_plan(123).schedule()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint fault classes
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (16, 16)),
+            "b": jax.random.normal(k, (16,)).astype(jnp.bfloat16)}
+
+
+def test_corrupt_shard_strict_restore_raises(tmp_path):
+    t = _tree()
+    path = store.save(str(tmp_path), 3, t)
+    assert corrupt_checkpoint(path, seed=5) > 0
+    with pytest.raises(Exception):          # checksum or zip-level failure
+        store.restore(str(tmp_path), 3, t, strict=True)
+    # non-strict is the forensic escape hatch: allowed to return garbage,
+    # but only for corruption that doesn't break the container format
+    try:
+        store.restore(str(tmp_path), 3, t, strict=False)
+    except store.CheckpointCorrupt:
+        pytest.fail("strict=False must not raise CheckpointCorrupt")
+    except Exception:
+        pass
+
+
+def test_restore_latest_verified_walks_past_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    corrupt_checkpoint(os.path.join(str(tmp_path), "step_00000002"))
+    step, got, _ = store.restore_latest_verified(str(tmp_path), _tree())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(_tree(1)["w"]))
+    got2 = mgr.restore_latest(_tree())
+    assert got2 is not None and got2[0] == 1
+
+
+def test_save_crash_mid_swap_preserves_a_checkpoint(tmp_path, monkeypatch):
+    """Kill save() at every rename boundary: a complete, verifiable
+    checkpoint for the step must survive each crash point."""
+    t1, t2 = _tree(1), _tree(2)
+    for fail_at in (1, 2):
+        d = str(tmp_path / f"crash{fail_at}")
+        store.save(d, 7, t1)
+        calls = {"n": 0}
+        real_rename = os.rename
+
+        def boom(src, dst, *, _fail_at=fail_at):
+            calls["n"] += 1
+            if calls["n"] == _fail_at:
+                raise OSError("injected crash mid-swap")
+            return real_rename(src, dst)
+
+        monkeypatch.setattr(os, "rename", boom)
+        with pytest.raises(OSError):
+            store.save(d, 7, t2)
+        monkeypatch.setattr(os, "rename", real_rename)
+        repaired = store.recover(d)
+        assert store.list_steps(d) == [7], (fail_at, repaired)
+        step, got, _ = store.restore_latest_verified(d, t1)
+        assert step == 7
+        # crash before the swap keeps the old tree; crash between the
+        # renames recovers the new one — either way the data verifies
+        want = t1 if fail_at == 1 else t2
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(want["w"]))
+
+
+def test_manager_injected_corruption_end_to_end(tmp_path):
+    inj = FaultInjector(FaultPlan([Fault("ckpt.save", 1, "corrupt")]))
+    mgr = CheckpointManager(str(tmp_path), keep=5, injector=inj)
+    mgr.save(1, _tree(1))     # poll 0: clean
+    mgr.save(2, _tree(2))     # poll 1: corrupted on disk
+    assert inj.remaining() == 0
+    got = mgr.restore_latest(_tree())
+    assert got is not None and got[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# training fault classes
+# ---------------------------------------------------------------------------
+
+TCFG = reduced_config("phi3-mini-3.8b").replace(num_layers=1)
+SHAPE = ShapeConfig("chaos", seq_len=16, global_batch=4, kind="train")
+
+
+def _train_setup(tc):
+    state = tl.init_train_state(jax.random.PRNGKey(tc.seed), TCFG, tc)
+    step_fn = jax.jit(tl.make_train_step(TCFG, tc))
+    loader = Loader(SyntheticLM(TCFG, SHAPE, seed=tc.seed))
+    return state, step_fn, loader
+
+
+def test_train_auto_resume_matches_fault_free(tmp_path):
+    tc = TrainConfig(total_steps=8, warmup_steps=1, learning_rate=1e-3)
+
+    # fault-free reference
+    state, step_fn, loader = _train_setup(tc)
+    ref, _ = train_with_recovery(state, step_fn, loader, total_steps=8)
+
+    # crash at steps 2 and 5; recover from verified checkpoints
+    state, step_fn, loader = _train_setup(tc)
+    inj = FaultInjector(FaultPlan([Fault("train.step", 2, "exception"),
+                                   Fault("train.step", 5, "exception")]))
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    got, restarts = train_with_recovery(
+        state, step_fn, loader, total_steps=8, manager=mgr,
+        checkpoint_every=2, injector=inj, max_restarts=4,
+        backoff_base_s=0.0, registry=obs.Registry())
+    assert restarts == 2 and inj.remaining() == 0
+    for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(got.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_train_recovery_gives_up_past_max_restarts():
+    tc = TrainConfig(total_steps=4, warmup_steps=1)
+    state, step_fn, loader = _train_setup(tc)
+    inj = FaultInjector(FaultPlan(
+        [Fault("train.step", t, "exception") for t in range(4)]))
+    with pytest.raises(TransientFault):
+        train_with_recovery(state, step_fn, loader, total_steps=4,
+                            injector=inj, max_restarts=2,
+                            backoff_base_s=0.0)
+
+
+def test_grad_spike_skip_keeps_state():
+    tc = TrainConfig(total_steps=4, warmup_steps=1, grad_clip=0.0,
+                     grad_skip_threshold=1e-6)    # everything is a spike
+    state, step_fn, loader = _train_setup(tc)
+    before = jax.tree.map(np.asarray, state.params)
+    state2, metrics = step_fn(state, next(loader))
+    assert int(metrics["grad_skipped"]) == 1
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(state2.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert int(state2.opt.step) == int(state.opt.step)
+
+
+def test_fleet_pod_stall_masked_out():
+    """A stalled pod's gradient is excluded: the fleet step over
+    (healthy pod batch + garbage pod batch) with the garbage pod masked
+    equals the masked-mean over healthy pods only."""
+    tc = TrainConfig(total_steps=4, warmup_steps=1)
+    state = tl.init_train_state(jax.random.PRNGKey(0), TCFG, tc)
+    fleet_fn = jax.jit(tl.make_fleet_train_step(TCFG, tc, n_pods=2))
+    loader = Loader(SyntheticLM(TCFG, SHAPE, seed=0))
+    batch = next(loader)
+    pod_batch = tl._split_batch(batch, 2)
+    # pod 1 feeds garbage tokens — must not matter once masked
+    garbage = dict(pod_batch)
+    garbage["tokens"] = pod_batch["tokens"].at[1].set(0)
+    garbage["labels"] = pod_batch["labels"].at[1].set(1)
+    mask = jnp.asarray([1.0, 0.0])
+    s_a, m_a = fleet_fn(state, pod_batch, mask)
+    state_b = tl.init_train_state(jax.random.PRNGKey(0), TCFG, tc)
+    s_b, m_b = fleet_fn(state_b, garbage, mask)
+    assert int(m_a["pods_healthy"]) == 1
+    for a, b in zip(jax.tree.leaves(s_a.params), jax.tree.leaves(s_b.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_fleet_pod_faults_drive_masks():
+    reg = obs.Registry()
+    fleet = Fleet(3, policy=StragglerPolicy(deadline_s=1.0,
+                                            max_consecutive_skips=2),
+                  registry=reg)
+    inj = FaultInjector(FaultPlan([Fault("pod", 0, "pod_stall", 0.0),
+                                   Fault("pod", 1, "pod_fail", 2.0)]))
+    from repro.training.resilient import _pod_waits
+    healthy = fleet.note_waits(_pod_waits(inj, fleet))
+    assert list(healthy) == [0.0, 1.0, 1.0]      # pod 0 stalled
+    healthy = fleet.note_waits(_pod_waits(inj, fleet))
+    assert list(healthy) == [1.0, 1.0, 0.0]      # pod 0 back, pod 2 failed
+    snap = reg.snapshot()
+    assert snap["fleet.pod_skips"]["value"] == 1
+    assert snap["fleet.pods_healthy"]["value"] == 2
+    assert inj.remaining() == 0

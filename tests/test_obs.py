@@ -210,3 +210,38 @@ def test_instrument_kernel_enabled_counts_and_times():
         assert snap["kernels.fake.time_s"]["count"] == 2
     finally:
         obs.disable_kernel_timing()
+
+
+# ------------------------------------------------------------- openmetrics
+
+def test_openmetrics_golden_text():
+    reg = Registry()
+    reg.counter("serving.tokens").inc(42)
+    reg.gauge("serving.queue_depth").set(3.0)
+    reg.gauge("never.set")                       # unset gauge: skipped
+    for v in (0.25, 0.25, 0.5, 1.0):     # binary-exact: stable sum repr
+        reg.histogram("serving.ttft_s").observe(v)
+    got = obs.to_openmetrics(reg)
+    assert got == (
+        "# TYPE serving_queue_depth gauge\n"
+        "serving_queue_depth 3.0\n"
+        "# TYPE serving_tokens counter\n"
+        "serving_tokens_total 42\n"
+        "# TYPE serving_ttft_s summary\n"
+        'serving_ttft_s{quantile="0.5"} 0.5\n'
+        'serving_ttft_s{quantile="0.9"} 1.0\n'
+        'serving_ttft_s{quantile="0.99"} 1.0\n'
+        "serving_ttft_s_count 4\n"
+        "serving_ttft_s_sum 2.0\n"
+        "# EOF\n")
+    # a snapshot dict renders identically to the live registry
+    assert obs.to_openmetrics(reg.snapshot()) == got
+
+
+def test_openmetrics_name_sanitization_and_empty():
+    reg = Registry()
+    reg.counter("faults.injected.serving.logits.nan-logits").inc()
+    text = obs.to_openmetrics(reg)
+    assert "faults_injected_serving_logits_nan_logits_total 1" in text
+    assert text.endswith("# EOF\n")
+    assert obs.to_openmetrics(Registry()) == "# EOF\n"
