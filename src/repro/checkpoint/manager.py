@@ -22,6 +22,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 
 from repro.checkpoint import store
+from repro.obs.flight import flight
 
 
 class CheckpointManager:
@@ -49,6 +50,7 @@ class CheckpointManager:
     def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
         path = store.save(self.dir, step, tree, meta)
         self._maybe_corrupt(path)
+        flight.record("ckpt.save", step=step, path=path, mode="sync")
         self._gc()
         return path
 
@@ -63,6 +65,7 @@ class CheckpointManager:
         def work():
             path = store.save(self.dir, step, host_tree, meta)
             self._maybe_corrupt(path)
+            flight.record("ckpt.save", step=step, path=path, mode="async")
             self._gc()
 
         self._thread = threading.Thread(target=work, daemon=True)
@@ -93,9 +96,15 @@ class CheckpointManager:
         with clean checksums (walking back past corrupt entries), or
         None if there is nothing to restore."""
         try:
-            return store.restore_latest_verified(self.dir, like, shardings)
+            got = store.restore_latest_verified(self.dir, like, shardings)
         except FileNotFoundError:
+            flight.record("ckpt.restore", outcome="none")
             return None
+        if got is not None:
+            flight.record("ckpt.restore", outcome="ok", step=got[0])
+        else:
+            flight.record("ckpt.restore", outcome="none")
+        return got
 
     # -- preemption ---------------------------------------------------------
 

@@ -23,13 +23,18 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, NamedTuple, Optional
+import time
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.simt import isa, scheduler
+# leaf obs modules only (tracing/flight are stdlib-light and import no
+# core code) — both are off-by-default, one attribute read on the fast path
+from repro.obs.flight import flight as _flight
+from repro.obs.tracing import tracer as _tracer
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -648,13 +653,90 @@ def _run_jit(mc: MachineConfig, imem: jax.Array, st: State) -> State:
     return jax.lax.while_loop(cond, lambda s: step(s, imem), st)
 
 
+class LaunchLog:
+    """Per-kernel launch telemetry: each `machine.run` call (== one kernel
+    launch via pocl_spawn/raw_spawn) records its label, stats delta, and
+    wall time, so multi-kernel pipelines (gaussian Fan1/Fan2, k-means
+    assign/update, ...) get a PerfReport PER KERNEL instead of one blurred
+    per-run aggregate.
+
+    Off by default — the disabled path adds one attribute read to `run`.
+    Enabling forces a host sync per launch (stats must be read back), so
+    it is a profiling switch, not an always-on counter."""
+
+    def __init__(self) -> None:
+        self.enabled = False
+        self.records: List[Dict[str, Any]] = []
+
+    def enable(self) -> None:
+        self.enabled = True
+
+    def disable(self) -> None:
+        self.enabled = False
+
+    def clear(self) -> None:
+        self.records = []
+
+    def record(self, label: str, stats: Dict[str, int],
+               wall_s: float) -> None:
+        self.records.append({"label": label, "stats": stats,
+                             "wall_s": wall_s})
+
+    def per_kernel(self) -> Dict[str, Dict[str, int]]:
+        """Aggregate stats by kernel label (summed over launches, plus a
+        `launches` count and `wall_s` total)."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for rec in self.records:
+            agg = out.setdefault(rec["label"], {"launches": 0,
+                                                "wall_s": 0.0})
+            agg["launches"] += 1
+            agg["wall_s"] = round(agg["wall_s"] + rec["wall_s"], 6)
+            for k, v in rec["stats"].items():
+                agg[k] = agg.get(k, 0) + v
+        return out
+
+    def reports(self, mc: Optional[MachineConfig] = None
+                ) -> Dict[str, Any]:
+        """{label: PerfReport} over the aggregated per-kernel stats."""
+        from repro.obs.perf import PerfReport
+        return {label: PerfReport.from_stats(
+                    stats, warps=mc.warps if mc else None,
+                    threads=mc.threads if mc else None)
+                for label, stats in self.per_kernel().items()}
+
+
+# process-global launch log (mirrors obs.tracer / obs.flight)
+launch_log = LaunchLog()
+
+
 def run(mc: MachineConfig, program: np.ndarray,
         dmem_image: Optional[np.ndarray] = None,
-        state: Optional[State] = None) -> State:
-    """Run `program` (np.uint32 words) to completion; returns final State."""
+        state: Optional[State] = None,
+        label: Optional[str] = None) -> State:
+    """Run `program` (np.uint32 words) to completion; returns final State.
+
+    `label` names the launch for telemetry (per-kernel LaunchLog entries,
+    `simt:launch:<label>` trace spans, flight events).  With the launch
+    log, tracer, and flight recorder all disabled (the default) this is
+    exactly the bare jitted run — no sync, no clock reads."""
     st = state if state is not None else init_state(mc, dmem_image)
     imem = jnp.asarray(np.asarray(program, np.uint32))
-    return _run_jit(mc, imem, st)
+    if not (launch_log.enabled or _tracer.enabled or _flight.enabled):
+        return _run_jit(mc, imem, st)
+    name = label or "kernel"
+    base = stats_dict(st) if state is not None else None
+    t0 = time.perf_counter()
+    with _tracer.span(f"simt:launch:{name}"):
+        out = _run_jit(mc, imem, st)
+        stats = stats_dict(out)         # blocks: the span covers execution
+    wall_s = time.perf_counter() - t0
+    if base is not None:                # continuation run: delta only
+        stats = {k: v - base.get(k, 0) for k, v in stats.items()}
+    if launch_log.enabled:
+        launch_log.record(name, stats, wall_s)
+    _flight.record("simt.launch", label=name, cycles=stats["cycles"],
+                   instrs=stats["instrs"], wall_s=round(wall_s, 6))
+    return out
 
 
 def stats_dict(st: State) -> Dict[str, int]:

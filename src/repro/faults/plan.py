@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import obs
+from repro.obs.flight import flight
 
 __all__ = ["Fault", "FaultPlan", "FaultInjector", "TransientFault",
            "DEFAULT_ARGS"]
@@ -131,6 +132,11 @@ class FaultInjector:
         for f in fired:
             self.metrics.counter("faults.injected").inc()
             self.metrics.counter(f"faults.injected.{f.site}.{f.kind}").inc()
+            # forensics: every firing lands in the flight ring (no-op
+            # when the recorder is off), so a crash dump shows exactly
+            # which injected faults preceded it
+            flight.record("fault.fired", site=f.site, fault=f.kind,
+                          at=f.at, arg=f.arg)
         return fired
 
     # -- typed convenience hooks (each owns its site's poll for the tick) --

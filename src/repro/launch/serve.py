@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import sys
+import threading
 import time
 
 import jax
@@ -20,11 +21,17 @@ import numpy as np
 from repro import obs
 from repro.configs import get_config, reduced_config
 from repro.models import api
+from repro.obs.flight import flight
 from repro.serving.engine import Engine
 from repro.serving.sampler import SamplerConfig
 
+# the most recent ObsServer started by main() — tests drive main() in a
+# thread and scrape this server's live endpoints while it serves traffic
+last_server: obs.ObsServer = None
+
 
 def main(argv=None) -> int:
+    global last_server
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -53,6 +60,15 @@ def main(argv=None) -> int:
                          "reason 'timeout'")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bounded admission queue; overflow is shed")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the live observability plane (/metrics, "
+                         "/healthz, /debug/requests, /debug/flight) on "
+                         "this port; 0 picks an ephemeral port; default "
+                         "off (bit-identical serving path)")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="enable the crash-forensics flight recorder; "
+                         "dumps flight_*.json here on crash, fault-plan "
+                         "exhaustion, or SIGUSR1")
     args = ap.parse_args(argv)
 
     if args.trace:
@@ -74,6 +90,33 @@ def main(argv=None) -> int:
                  default_deadline_s=args.deadline_s,
                  max_queue=args.max_queue)
 
+    if args.flight_dir:
+        flight.enable()
+        flight.attach_tracer(obs.tracer)
+        flight.add_metrics_source(eng.metrics_snapshot)
+        if injector is not None:
+            flight.add_metrics_source(injector.metrics)
+        if threading.current_thread() is threading.main_thread():
+            # signal.signal is main-thread-only; tests driving main() from
+            # a worker thread still get crash/exhaustion dumps
+            flight.install_signal_handler(
+                args.flight_dir,
+                callback=lambda p: print(f"[flight] wrote {p}", flush=True))
+    server = None
+    if args.metrics_port is not None:
+        server = obs.ObsServer(
+            port=args.metrics_port,
+            registries=[eng.metrics, obs.metrics]
+            + ([injector.metrics] if injector is not None else []),
+            health=eng.liveness,
+            requests=eng.debug_requests,
+            flight=flight)
+        port = server.start()
+        last_server = server
+        print(f"[obs] live plane on http://127.0.0.1:{port}"
+              f"  (/metrics /healthz /debug/requests /debug/flight)",
+              flush=True)
+
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix).tolist()
     t0 = time.time()
@@ -81,7 +124,16 @@ def main(argv=None) -> int:
         plen = int(rng.integers(2, 12))
         prompt = shared + rng.integers(0, cfg.vocab_size, plen).tolist()
         eng.submit(prompt, max_new=args.max_new)
-    eng.run()
+    try:
+        eng.run()
+    except BaseException as e:
+        if args.flight_dir:
+            path = flight.crash_dump(args.flight_dir, e)
+            print(f"[flight] crash dump: {path}", flush=True)
+        if server is not None:
+            server.stop()
+        raise
+    eng.liveness.done()
     dt = time.time() - t0
     res = eng.results()
     total = sum(len(v) for v in res.values())
@@ -105,9 +157,18 @@ def main(argv=None) -> int:
         for key, s in sorted(injector.metrics.snapshot().items()):
             print(f"  {key}: {s.get('value')}", flush=True)
         print(f"  faults.remaining: {injector.remaining()}", flush=True)
+    if args.flight_dir and injector is not None:
+        # every chaos run leaves a forensic artifact: the fault plan ran
+        # to exhaustion (or partway) and the ring holds what happened
+        reason = ("fault-plan-exhausted" if injector.remaining() == 0
+                  else "chaos-run-end")
+        path = flight.dump(args.flight_dir, reason=reason)
+        print(f"[flight] wrote {path}", flush=True)
     if args.trace:
         obs.write_chrome_trace(args.trace, obs.tracer.drain())
         print(f"[trace] wrote {args.trace}", flush=True)
+    if server is not None:
+        server.stop()
     return 0
 
 

@@ -15,11 +15,16 @@ from __future__ import annotations
 
 import argparse
 import sys
+import threading
 import time
 
 import jax
 
 from repro import obs
+from repro.obs.flight import flight
+
+# the most recent ObsServer started by main() — see launch/serve.py
+last_server: obs.ObsServer = None
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import TrainConfig, get_config, reduced_config
 from repro.configs.base import ShapeConfig
@@ -30,6 +35,7 @@ from repro.training import loop as tl
 
 
 def main(argv=None) -> int:
+    global last_server
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=100)
@@ -57,6 +63,12 @@ def main(argv=None) -> int:
     ap.add_argument("--grad-skip-threshold", type=float, default=0.0,
                     help="skip optimizer updates whose global grad norm "
                          "is non-finite or above this (0 = off)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve /metrics + /healthz on this port; 0 picks "
+                         "an ephemeral port; default off")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="enable the flight recorder; dumps flight_*.json "
+                         "here on crash or SIGUSR1")
     args = ap.parse_args(argv)
     if args.trace:
         obs.enable_tracing()
@@ -86,6 +98,31 @@ def main(argv=None) -> int:
         injector = faults.FaultInjector(
             faults.training_plan(args.chaos_seed, horizon=args.steps))
 
+    # live observability plane (default off; see launch/serve.py for the
+    # serving twin of this wiring)
+    live = obs.Liveness(max_age_s=30.0)     # train steps can be slow on CPU
+    if args.flight_dir:
+        flight.enable()
+        flight.attach_tracer(obs.tracer)
+        flight.add_metrics_source(obs.metrics)
+        if injector is not None:
+            flight.add_metrics_source(injector.metrics)
+        if threading.current_thread() is threading.main_thread():
+            flight.install_signal_handler(
+                args.flight_dir,
+                callback=lambda p: print(f"[flight] wrote {p}", flush=True))
+    server = None
+    if args.metrics_port is not None:
+        server = obs.ObsServer(
+            port=args.metrics_port,
+            registries=[obs.metrics]
+            + ([injector.metrics] if injector is not None else []),
+            health=live, flight=flight)
+        port = server.start()
+        last_server = server
+        print(f"[obs] live plane on http://127.0.0.1:{port}"
+              f"  (/metrics /healthz /debug/flight)", flush=True)
+
     start = 0
     mgr = None
     if args.ckpt:
@@ -105,30 +142,72 @@ def main(argv=None) -> int:
         from repro.training.resilient import train_with_recovery
 
         def on_step(step, st, metrics):
+            live.beat()
             if step % args.log_every == 0:
                 m = {k: float(v) for k, v in metrics.items()}
                 print(f"step {step:5d}  loss {m['loss']:.4f}  "
                       f"gnorm {m['grad_norm']:.2f}", flush=True)
 
-        with shd.axis_rules(mesh, rules):
-            state, restarts = train_with_recovery(
-                state, step_fn, loader,
-                total_steps=args.steps, start_step=start,
-                manager=mgr, checkpoint_every=args.ckpt_every,
-                injector=injector, max_restarts=args.max_restarts,
-                registry=obs.metrics, on_step=on_step)
+        try:
+            with shd.axis_rules(mesh, rules):
+                state, restarts = train_with_recovery(
+                    state, step_fn, loader,
+                    total_steps=args.steps, start_step=start,
+                    manager=mgr, checkpoint_every=args.ckpt_every,
+                    injector=injector, max_restarts=args.max_restarts,
+                    registry=obs.metrics, on_step=on_step)
+        except BaseException as e:
+            if args.flight_dir:
+                path = flight.crash_dump(args.flight_dir, e)
+                print(f"[flight] crash dump: {path}", flush=True)
+            if server is not None:
+                server.stop()
+            raise
+        live.done()
         print(f"[chaos] restarts={restarts} "
               f"faults_remaining={injector.remaining()}", flush=True)
         for key, s in sorted(injector.metrics.snapshot().items()):
             print(f"  {key}: {s.get('value')}", flush=True)
+        if args.flight_dir:
+            reason = ("fault-plan-exhausted" if injector.remaining() == 0
+                      else "chaos-run-end")
+            path = flight.dump(args.flight_dir, reason=reason)
+            print(f"[flight] wrote {path}", flush=True)
+        if server is not None:
+            server.stop()
         print("[done]", flush=True)
         return 0
 
+    try:
+        _train_plain(args, mesh, rules, state, step_fn, loader, mgr, live,
+                     shape, start)
+    except BaseException as e:
+        if args.flight_dir:
+            path = flight.crash_dump(args.flight_dir, e)
+            print(f"[flight] crash dump: {path}", flush=True)
+        if server is not None:
+            server.stop()
+        raise
+    live.done()
+    if args.trace:
+        obs.write_chrome_trace(args.trace, obs.tracer.drain())
+        print(f"[trace] wrote {args.trace}", flush=True)
+    if server is not None:
+        server.stop()
+    print("[done]", flush=True)
+    return 0
+
+
+def _train_plain(args, mesh, rules, state, step_fn, loader, mgr, live,
+                 shape, start):
+    """The fault-free training loop (chaos runs go through
+    training.resilient instead)."""
     ctx = shd.axis_rules(mesh, rules)
     with ctx:
         t0 = time.time()
         t_prev = time.perf_counter()
         for step in range(start, args.steps):
+            live.beat()
             batch = next(loader)
             with obs.trace.span("train_step", step=step + 1):
                 state, metrics = step_fn(state, batch)
@@ -152,11 +231,6 @@ def main(argv=None) -> int:
         if mgr:
             mgr.wait()
             mgr.save(args.steps, state, {"data_step": loader.step})
-    if args.trace:
-        obs.write_chrome_trace(args.trace, obs.tracer.drain())
-        print(f"[trace] wrote {args.trace}", flush=True)
-    print("[done]", flush=True)
-    return 0
 
 
 if __name__ == "__main__":

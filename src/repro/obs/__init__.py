@@ -25,9 +25,11 @@ from typing import Optional
 
 from repro.obs.export import (event_tree, load_chrome_trace, text_summary,
                               to_openmetrics, write_chrome_trace)
+from repro.obs.flight import FlightRecorder, flight, validate_flight
 from repro.obs.perf import PerfReport
 from repro.obs.registry import (Counter, Gauge, Histogram, Registry, bump,
                                 device_counters, merge_device, metrics)
+from repro.obs.server import Liveness, ObsServer
 from repro.obs.tracing import Tracer, trace, tracer
 
 __all__ = [
@@ -37,6 +39,8 @@ __all__ = [
     "write_chrome_trace", "load_chrome_trace", "event_tree", "text_summary",
     "to_openmetrics",
     "PerfReport",
+    "FlightRecorder", "flight", "validate_flight",
+    "Liveness", "ObsServer",
     "enable_tracing", "disable_tracing", "tracing_enabled",
     "enable_kernel_timing", "disable_kernel_timing",
     "kernel_timing_enabled", "instrument_kernel",

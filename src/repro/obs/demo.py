@@ -2,11 +2,14 @@
 
     PYTHONPATH=src python -m repro.obs.demo [--out obs_demo.trace.json]
 
-Runs (1) a SIMT Rodinia kernel on the cycle-level machine and prints its
-Vortex-style PerfReport, (2) a short serving session on a reduced model
-and prints the serving metrics snapshot (TTFT, tokens/sec, batch
-efficiency), then (3) writes a Chrome trace-event JSON of everything and
-verifies it round-trips through `json.load`.  Load the trace at
+Runs (1) SIMT Rodinia kernels on the cycle-level machine and prints a
+Vortex-style PerfReport PER KERNEL LAUNCH (the gaussian pipeline shows
+two: fan1 and fan2), (2) a short serving session on a reduced model —
+with the live HTTP plane up, scraping its own `/metrics` + `/healthz`
+and printing the serving snapshot, (3) dumps and schema-validates a
+flight-recorder artifact, then (4) writes a Chrome trace-event JSON of
+everything (per-request Perfetto tracks included) and verifies it
+round-trips through `json.load`.  Load the trace at
 https://ui.perfetto.dev.
 """
 from __future__ import annotations
@@ -14,23 +17,36 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import tempfile
+import urllib.request
 
 from repro import obs
+from repro.obs.flight import flight, validate_flight
 
 
 def run_simt_section() -> None:
     from repro.core.simt import machine
+    from repro.core.simt.machine import launch_log
     from repro.runtime.kernels_src import rodinia
 
     mc = machine.MachineConfig(warps=4, threads=4, miss_latency=16)
+    launch_log.enable()
     with obs.trace.span("simt:saxpy", warps=mc.warps, threads=mc.threads):
         res, ok = rodinia.BENCHMARKS["saxpy"](mc, n=128, repeats=4)
     assert ok, "saxpy verification failed"
+    res2, ok2 = rodinia.BENCHMARKS["gaussian"](mc, n=12)
+    assert ok2, "gaussian verification failed"
+    # per-kernel PerfReports: one per launch label, not one per run —
+    # gaussian's two-kernel pipeline gets separate fan1/fan2 reports
+    for label, rep in launch_log.reports(mc).items():
+        print(f"[{label}]")
+        print(rep)
+        assert rep.ipc > 0, f"empty PerfReport for {label}"
     rep = machine.perf_report(res.stats, mc)
-    print(rep)
     assert rep.ipc > 0 and rep.dcache_hit_rate > 0, "empty PerfReport"
     obs.metrics.gauge("simt.ipc").set(rep.ipc)
     obs.metrics.gauge("simt.dcache_hit_rate").set(rep.dcache_hit_rate)
+    launch_log.disable()
 
 
 def run_serving_section() -> None:
@@ -43,10 +59,22 @@ def run_serving_section() -> None:
     params = api.build_params(jax.random.PRNGKey(0), cfg)
     eng = Engine(cfg, params, n_slots=4, max_len=64, prompt_bucket=8,
                  eos_id=-1)
-    with obs.trace.span("serve_session"):
-        for p in ([5, 9, 2], [7, 1], [3, 3, 3, 3], [11, 4]):
-            eng.submit(p, max_new=6)
-        eng.run()
+    # the live HTTP plane: scrape our own endpoints mid-demo
+    with obs.ObsServer(port=0, registries=[eng.metrics, obs.metrics],
+                       health=eng.liveness, requests=eng.debug_requests,
+                       flight=flight) as srv:
+        with obs.trace.span("serve_session"):
+            for p in ([5, 9, 2], [7, 1], [3, 3, 3, 3], [11, 4]):
+                eng.submit(p, max_new=6)
+            eng.run()
+        eng.liveness.done()
+        base = f"http://127.0.0.1:{srv.port}"
+        om = urllib.request.urlopen(f"{base}/metrics").read().decode()
+        assert om.endswith("# EOF\n") and '_bucket{le="' in om
+        hz = json.load(urllib.request.urlopen(f"{base}/healthz"))
+        dr = json.load(urllib.request.urlopen(f"{base}/debug/requests"))
+        print(f"live plane: {base}  ({len(om.splitlines())} OpenMetrics "
+              f"lines, healthz={hz['state']}, {len(dr)} request rows)")
     snap = eng.metrics_snapshot()
     ttft = snap["serving.ttft_s"]
     print("serving metrics:")
@@ -71,11 +99,24 @@ def main(argv=None) -> int:
 
     obs.enable_tracing()
     obs.enable_kernel_timing()
+    flight.enable()
+    flight.attach_tracer(obs.tracer)
+    flight.add_metrics_source(obs.metrics)
 
     print("---- SIMT machine ----")
     run_simt_section()
     print("\n---- serving ----")
     run_serving_section()
+
+    print("\n---- flight recorder ----")
+    with tempfile.TemporaryDirectory() as td:
+        path = flight.dump(td, reason="demo")
+        doc = json.load(open(path))
+        validate_flight(doc)
+        kinds = sorted({e["kind"] for e in doc["events"]})
+        print(f"flight dump: {doc['n_events']} events "
+              f"({doc['dropped']} dropped), kinds={kinds}")
+        assert "serving.finish" in kinds and "simt.launch" in kinds
 
     events = obs.tracer.drain()
     obs.write_chrome_trace(args.out, events,

@@ -65,12 +65,15 @@ def to_openmetrics(source: Any) -> str:
     OpenMetrics text exposition format.
 
     Counters become ``<name>_total``; gauges expose their last value
-    (unset gauges are skipped); histograms are exported as summaries —
-    ``quantile`` labels from the deterministic reservoir plus
-    ``_count``/``_sum``.  Output is fully deterministic for a given
-    registry state (sorted names, stable number formatting), which is
-    what makes it golden-testable, and ends with the mandatory
-    ``# EOF`` terminator.
+    (unset gauges are skipped).  Histograms with cumulative bucket
+    counts (`registry.Histogram` snapshots carry ``buckets``) export as
+    proper OpenMetrics histograms — ``<name>_bucket{le="..."}`` lines
+    cumulative up to the mandatory ``le="+Inf"``, plus
+    ``_count``/``_sum``; snapshot dicts without bucket data (foreign or
+    pre-bucket snapshots) fall back to the quantile-summary exposition.
+    Output is fully deterministic for a given registry state (sorted
+    names, stable number formatting), which is what makes it
+    golden-testable, and ends with the mandatory ``# EOF`` terminator.
     """
     snap = source.snapshot() if hasattr(source, "snapshot") else dict(source)
     lines: List[str] = []
@@ -87,11 +90,19 @@ def to_openmetrics(source: Any) -> str:
             lines.append(f"# TYPE {om} gauge")
             lines.append(f"{om} {_om_num(s['value'])}")
         elif kind == "histogram":
-            lines.append(f"# TYPE {om} summary")
-            for q, key in (("0.5", "p50"), ("0.9", "p90"), ("0.99", "p99")):
-                if key in s:
-                    lines.append(f'{om}{{quantile="{q}"}} '
-                                 f"{_om_num(s[key])}")
+            buckets = s.get("buckets")
+            if buckets:
+                lines.append(f"# TYPE {om} histogram")
+                for le, n in buckets:
+                    le_s = "+Inf" if le == "+Inf" else _om_num(le)
+                    lines.append(f'{om}_bucket{{le="{le_s}"}} {_om_num(n)}')
+            else:
+                lines.append(f"# TYPE {om} summary")
+                for q, key in (("0.5", "p50"), ("0.9", "p90"),
+                               ("0.99", "p99")):
+                    if key in s:
+                        lines.append(f'{om}{{quantile="{q}"}} '
+                                     f"{_om_num(s[key])}")
             lines.append(f"{om}_count {_om_num(s.get('count', 0))}")
             lines.append(f"{om}_sum {_om_num(s.get('sum', 0.0))}")
     lines.append("# EOF")

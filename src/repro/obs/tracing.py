@@ -18,7 +18,7 @@ from __future__ import annotations
 import functools
 import threading
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 __all__ = ["Span", "Tracer", "tracer", "trace"]
 
@@ -89,6 +89,19 @@ class Tracer:
         # trace timestamps are relative to tracer creation so they stay
         # small and Perfetto's timeline starts near zero
         self._epoch_ns = time.perf_counter_ns()
+        # optional event sinks (e.g. the flight recorder mirrors span
+        # close events into its ring); empty list on the default path
+        self._sinks: List[Any] = []
+
+    def add_sink(self, fn) -> None:
+        """`fn(event_dict)` is called for every recorded event.  Used by
+        the flight recorder to mirror span open/close into its ring."""
+        if fn not in self._sinks:
+            self._sinks.append(fn)
+
+    def remove_sink(self, fn) -> None:
+        if fn in self._sinks:
+            self._sinks.remove(fn)
 
     # -- control -----------------------------------------------------------
 
@@ -111,17 +124,54 @@ class Tracer:
             return _NOOP
         return Span(self, name, args)
 
-    def instant(self, name: str, **args) -> None:
-        """Zero-duration marker event."""
+    def instant(self, name: str, *, pid: int = 0,
+                tid: Optional[int] = None, **args) -> None:
+        """Zero-duration marker event.  `pid`/`tid` place the marker on
+        an explicit track (request timelines use pid=1, tid=rid); the
+        default is the calling thread's track."""
         if not self.enabled:
             return
         ev = {"name": name, "ph": "i", "s": "t",
               "ts": (time.perf_counter_ns() - self._epoch_ns) / 1e3,
-              "pid": 0, "tid": threading.get_ident() & 0xFFFF}
+              "pid": pid,
+              "tid": (threading.get_ident() & 0xFFFF) if tid is None
+              else tid}
         if args:
             ev["args"] = args
+        self._append(ev)
+
+    def complete(self, name: str, t0_s: float, t1_s: float, *,
+                 pid: int = 0, tid: Optional[int] = None, **args) -> None:
+        """Record an explicit-interval "X" event from perf_counter
+        timestamps (seconds).  This is how request-scoped timelines are
+        built: the caller keeps its own start/end marks (e.g. submit and
+        admit times) and lays the interval on a per-request track
+        (pid, tid) instead of the calling thread's."""
+        if not self.enabled:
+            return
+        ev = {"name": name, "ph": "X",
+              "ts": (t0_s * 1e9 - self._epoch_ns) / 1e3,     # microseconds
+              "dur": max((t1_s - t0_s) * 1e6, 0.001),
+              "pid": pid,
+              "tid": (threading.get_ident() & 0xFFFF) if tid is None
+              else tid}
+        if args:
+            ev["args"] = args
+        self._append(ev)
+
+    def thread_name(self, pid: int, tid: int, label: str) -> None:
+        """Metadata event naming a (pid, tid) track — Perfetto shows the
+        label instead of the raw tid (e.g. "req 3" for request tracks)."""
+        if not self.enabled:
+            return
+        self._append({"name": "thread_name", "ph": "M", "pid": pid,
+                      "tid": tid, "args": {"name": label}})
+
+    def _append(self, ev: Dict[str, Any]) -> None:
         with self._lock:
             self.events.append(ev)
+        for sink in self._sinks:
+            sink(ev)
 
     def _record(self, sp: Span, t1_ns: int) -> None:
         ev = {"name": sp.name, "ph": "X",
@@ -130,8 +180,7 @@ class Tracer:
               "pid": 0, "tid": sp.tid & 0xFFFF}
         if sp.args:
             ev["args"] = dict(sp.args)
-        with self._lock:
-            self.events.append(ev)
+        self._append(ev)
 
     # -- draining ----------------------------------------------------------
 

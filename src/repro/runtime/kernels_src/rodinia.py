@@ -49,7 +49,7 @@ def vecadd(mc: MachineConfig, n: int = 512, seed: int = 0
     add  t6, t6, t0
     sw   t5, 0(t6)
 """
-    res = pocl_spawn(mc, body, [pa, pb, pc], n, al)
+    res = pocl_spawn(mc, body, [pa, pb, pc], n, al, label="vecadd")
     ok = bool(np.array_equal(res.words(pc, n), a + b))
     return res, ok
 
@@ -87,7 +87,7 @@ def saxpy(mc: MachineConfig, n: int = 512, alpha: float = 2.5, seed: int = 0,
     sw   t6, 0(t3)
 """
     res = pocl_spawn(mc, body, [f32_bits(alpha), px, py, po], n * repeats,
-                     al)
+                     al, label="saxpy")
     want = np.float32(alpha) * x + y
     got = res.floats(po, n)
     ok = bool(np.allclose(got, want, rtol=1e-5, atol=1e-5))
@@ -138,7 +138,8 @@ _gemm_done:
     add  t6, t6, t0
     sw   a5, 0(t6)
 """
-    res = pocl_spawn(mc, body, [m, k, n, pa, pb, pc], m * n, al)
+    res = pocl_spawn(mc, body, [m, k, n, pa, pb, pc], m * n, al,
+                     label="sgemm")
     got = res.floats(pc, m * n).reshape(m, n)
     ok = bool(np.allclose(got, A @ B, rtol=1e-4, atol=1e-4))
     return res, ok
@@ -289,7 +290,8 @@ _level_done:
     halt
 """
     res = raw_spawn(mc, full, al,
-                    argwords=[n_nodes, p_starts, p_adj, p_dist, p_flag])
+                    argwords=[n_nodes, p_starts, p_adj, p_dist, p_flag],
+                    label="bfs")
     want = bfs_oracle(starts, adj, src, n_nodes)
     got = res.words(p_dist, n_nodes)
     ok = bool(np.array_equal(got, want))
@@ -330,7 +332,7 @@ def gaussian(mc: MachineConfig, n: int = 24, kcol: int = 0, seed: int = 0
     add  a6, a6, t5
     sw   a5, 0(a6)
 """
-    res1 = pocl_spawn(mc, fan1, [pa, pm], rows, al)
+    res1 = pocl_spawn(mc, fan1, [pa, pm], rows, al, label="gaussian:fan1")
     # Fan2: A[r,c] -= m[r] * A[k,c]
     fan2 = f"""
     li   t0, {cols}
@@ -360,7 +362,8 @@ def gaussian(mc: MachineConfig, n: int = 24, kcol: int = 0, seed: int = 0
     sw   t6, 0(t2)
 """
     res2 = pocl_spawn(mc, fan2, [pa, pm], rows * cols, al,
-                      dmem_init=np.asarray(res1.state.dmem))
+                      dmem_init=np.asarray(res1.state.dmem),
+                      label="gaussian:fan2")
     # combined stats: the benchmark reports the sum of both launches
     res2.stats = {k: res1.stats[k] + res2.stats[k] for k in res2.stats}
     want = A.copy()
@@ -403,7 +406,7 @@ def nn(mc: MachineConfig, n: int = 512, seed: int = 0
     sw   t2, 0(t6)
 """
     res = pocl_spawn(mc, body, [px, py, pd, f32_bits(qx), f32_bits(qy)],
-                     n, al)
+                     n, al, label="nearn")
     want = (xs - qx) ** 2 + (ys - qy) ** 2
     ok = bool(np.allclose(res.floats(pd, n), want, rtol=1e-5, atol=1e-5))
     return res, ok
@@ -454,7 +457,7 @@ _km_done:
     add  t4, t4, t0
     sw   a6, 0(t4)
 """
-    res = pocl_spawn(mc, body, [pp, pc, pa], n, al)
+    res = pocl_spawn(mc, body, [pp, pc, pa], n, al, label="kmeans")
     d = ((pts[:, None, :] - cent[None]) ** 2).sum(-1)
     want = d.argmin(1).astype(np.int32)
     ok = bool(np.array_equal(res.words(pa, n), want))

@@ -117,14 +117,16 @@ def f32_bits(x: float) -> int:
 def pocl_spawn(mc: MachineConfig, body_asm: str, args: Sequence[int],
                n_items: int, alloc: Optional[Allocator] = None,
                prologue: str = "", epilogue: str = "",
-               dmem_init: Optional[np.ndarray] = None) -> LaunchResult:
+               dmem_init: Optional[np.ndarray] = None,
+               label: Optional[str] = None) -> LaunchResult:
     """Launch `body_asm` over n_items work-items (the paper's pocl_spawn).
 
     args word 0 is always N; caller args follow from word 1.
     prologue/epilogue: asm outside the per-gid __if guard (e.g. barrier
     phases for multi-phase kernels).  dmem_init: carry device memory over
     from a previous launch (multi-kernel pipelines, e.g. gaussian's
-    Fan1/Fan2)."""
+    Fan1/Fan2).  label: kernel name for per-launch telemetry (LaunchLog
+    entries, `simt:launch:<label>` trace spans)."""
     alloc = alloc or Allocator()
     argwords = [n_items] + [int(a) for a in args]
     src = BOOT.format(arg_base=ARG_BASE, body=prologue + body_asm + epilogue)
@@ -132,7 +134,7 @@ def pocl_spawn(mc: MachineConfig, body_asm: str, args: Sequence[int],
     dmem = (np.array(dmem_init, np.int32) if dmem_init is not None
             else alloc.build_dmem(mc.dmem_words))
     dmem[ARG_BASE // 4: ARG_BASE // 4 + len(argwords)] = argwords
-    st = machine.run(mc, prog, dmem_image=dmem)
+    st = machine.run(mc, prog, dmem_image=dmem, label=label)
     stats = machine.stats_dict(st)
     if stats["cycles"] >= mc.max_cycles:
         raise RuntimeError("kernel did not terminate within max_cycles")
@@ -140,7 +142,8 @@ def pocl_spawn(mc: MachineConfig, body_asm: str, args: Sequence[int],
 
 
 def raw_spawn(mc: MachineConfig, src: str, alloc: Optional[Allocator] = None,
-              argwords: Sequence[int] = ()) -> LaunchResult:
+              argwords: Sequence[int] = (),
+              label: Optional[str] = None) -> LaunchResult:
     """Launch a fully hand-written program (kernels that manage their own
     warp loop / barrier structure, e.g. BFS and tiled sgemm)."""
     alloc = alloc or Allocator()
@@ -149,7 +152,7 @@ def raw_spawn(mc: MachineConfig, src: str, alloc: Optional[Allocator] = None,
     if argwords:
         aw = list(map(int, argwords))
         dmem[ARG_BASE // 4: ARG_BASE // 4 + len(aw)] = aw
-    st = machine.run(mc, prog, dmem_image=dmem)
+    st = machine.run(mc, prog, dmem_image=dmem, label=label)
     stats = machine.stats_dict(st)
     if stats["cycles"] >= mc.max_cycles:
         raise RuntimeError("kernel did not terminate within max_cycles")

@@ -44,6 +44,12 @@ import numpy as np
 from repro import obs
 from repro.configs.base import ModelConfig
 from repro.faults.plan import FaultInjector, TransientFault
+from repro.obs.flight import flight
+
+# Perfetto pid for request-scoped timeline tracks: each rid gets its own
+# tid under this pid, so traces show one row per request (admission ->
+# queue wait -> prefill chunks -> decode -> finish)
+_REQ_TRACK_PID = 1
 from repro.models import api
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampler import (SamplerConfig, logit_entropy,
@@ -62,6 +68,7 @@ class Request:
     # "eos" | "max_new" | "max_len" | "timeout" | "shed" | "degraded"
     finish_reason: str = ""
     submit_t: float = 0.0
+    admit_t: float = 0.0
     first_tok_t: float = 0.0
     last_tok_t: float = 0.0
     deadline_s: Optional[float] = None   # TTL from submit; None = no deadline
@@ -126,6 +133,9 @@ class Engine:
         # changes jit cache behavior
         self.metrics = obs.Registry()
         self._t_start = time.perf_counter()
+        # watchdog-tick liveness: beaten at the top of every step()
+        # attempt; the HTTP plane's /healthz derives health from it
+        self.liveness = obs.Liveness()
         # failure hardening (all off by default — fault-free serving is
         # bit-identical to the unhardened engine)
         self.faults = faults
@@ -444,9 +454,25 @@ class Engine:
             self._chunk_hashes.pop(req.slot, None)
         self.metrics.counter("serving.requests_completed").inc()
         self.metrics.counter(f"serving.requests_completed.{reason}").inc()
+        now = time.perf_counter()
         if req.submit_t:
             self.metrics.histogram("serving.request_latency_s").observe(
-                time.perf_counter() - req.submit_t)
+                now - req.submit_t)
+        flight.record("serving.finish", rid=req.rid, reason=reason,
+                      out_tokens=len(req.out), degraded=req.degraded)
+        if obs.tracer.enabled and req.submit_t:
+            # request-track epilogue: the decode phase (first -> last
+            # token) and the whole-request envelope carrying the finish
+            # reason, both on this rid's Perfetto track
+            if req.first_tok_t and req.last_tok_t > req.first_tok_t:
+                obs.tracer.complete(
+                    "decode", req.first_tok_t, req.last_tok_t,
+                    pid=_REQ_TRACK_PID, tid=req.rid,
+                    tokens=max(len(req.out) - 1, 0))
+            obs.tracer.complete("request", req.submit_t, now,
+                                pid=_REQ_TRACK_PID, tid=req.rid,
+                                rid=req.rid, reason=reason,
+                                out_tokens=len(req.out))
 
     def _enforce_deadlines(self) -> None:
         """Time out queued and running requests past their TTL.  Queued
@@ -491,6 +517,13 @@ class Engine:
                 m.counter("serving.prefix_cache.misses").inc(
                     len(hashes) - n_chunks)
                 m.counter("serving.prefix_cache.hit_tokens").inc(matched)
+                if obs.tracer.enabled:
+                    # hit/miss marker on the request's own track, right
+                    # where its prefill timeline begins
+                    obs.tracer.instant(
+                        "prefix_hit" if matched else "prefix_miss",
+                        pid=_REQ_TRACK_PID, tid=req.rid,
+                        matched_tokens=matched)
             if matched:
                 groups.setdefault(id(entry), [entry, []])[1].append(slot)
             self.lens[slot] = matched
@@ -533,6 +566,14 @@ class Engine:
         now = time.perf_counter()
         req.first_tok_t = req.last_tok_t = now
         m.histogram("serving.ttft_s").observe(now - req.submit_t)
+        flight.record("serving.first_token", rid=req.rid, slot=slot,
+                      ttft_s=round(now - req.submit_t, 6))
+        if obs.tracer.enabled and req.admit_t:
+            # the whole prefill phase (admission -> first token) on this
+            # rid's track; the prefill_chunk intervals nest inside it
+            obs.tracer.complete("prefill", req.admit_t, now,
+                                pid=_REQ_TRACK_PID, tid=req.rid,
+                                prompt_tokens=len(req.prompt))
         m.counter("serving.prefills").inc()
         m.counter("serving.prompt_tokens").inc(len(req.prompt))
         m.counter("serving.tokens").inc()
@@ -563,12 +604,24 @@ class Engine:
         sel = np.zeros(self.n_slots, bool)
         sel[targets] = True
         self._key, k = jax.random.split(self._key)
+        t_chunk0 = time.perf_counter()
         with obs.trace.span("prefill_chunk", n=int(len(targets))):
             tok, self.caches, bad = self._chunk_fn(
                 self.params, self.caches, jnp.asarray(toks),
                 jnp.asarray(last_idx), k, jnp.asarray(sel))
             tok_np = np.asarray(tok)
             bad_np = np.asarray(bad)
+        if obs.tracer.enabled:
+            # mirror the batched chunk call onto every participating
+            # request's track — the shared interval shows exactly which
+            # requests rode the same batched prefill call
+            t_chunk1 = time.perf_counter()
+            for slot in targets:
+                slot = int(slot)
+                obs.tracer.complete(
+                    "prefill_chunk", t_chunk0, t_chunk1,
+                    pid=_REQ_TRACK_PID, tid=self._slot_req[slot].rid,
+                    pos=self._prefill_pos[slot], tokens=seg_len[slot])
         m.counter("serving.prefill_chunk_calls").inc()
         m.counter("serving.prefill_chunks").inc(int(len(targets)))
         m.histogram("serving.prefill_batch_width").observe(len(targets))
@@ -628,19 +681,24 @@ class Engine:
         m = self.metrics
         attempt = 0
         while True:
+            self.liveness.beat()
             t_tick = time.perf_counter()
             try:
                 if self.faults is not None:
                     self.faults.check_raise("serving.step")
                 produced = self._step_inner()
-            except TransientFault:
+            except TransientFault as e:
                 m.counter("serving.watchdog.transient_faults").inc()
                 if attempt >= self.step_retries:
                     m.counter("serving.watchdog.gave_up").inc()
+                    flight.record("serving.watchdog.gave_up",
+                                  attempt=attempt, exc=str(e))
                     raise
                 delay = min(self.retry_base_s * (2 ** attempt),
                             self.retry_max_s)
                 m.counter("serving.watchdog.retries").inc()
+                flight.record("serving.watchdog.retry", attempt=attempt,
+                              delay_s=delay, exc=str(e))
                 time.sleep(delay)
                 attempt += 1
                 continue
@@ -648,6 +706,8 @@ class Engine:
             m.histogram("serving.tick_s").observe(dt)
             if self.tick_budget_s is not None and dt > self.tick_budget_s:
                 m.counter("serving.watchdog.slow_ticks").inc()
+                flight.record("serving.watchdog.slow_tick", dt_s=round(dt, 6),
+                              budget_s=self.tick_budget_s)
             return produced
 
     def _step_inner(self) -> int:
@@ -675,8 +735,19 @@ class Engine:
                 break
             req = self.pending.popleft()
             req.slot = slot
+            req.admit_t = time.perf_counter()
             self._slot_req[slot] = req
             admitted.append((slot, req))
+            flight.record("serving.admit", rid=req.rid, slot=slot,
+                          prompt_tokens=len(req.prompt))
+            if obs.tracer.enabled:
+                # open this rid's Perfetto track: name it and lay the
+                # queue-wait interval (submit -> admit) as its first span
+                obs.tracer.thread_name(_REQ_TRACK_PID, req.rid,
+                                       f"req {req.rid}")
+                obs.tracer.complete("queue_wait", req.submit_t, req.admit_t,
+                                    pid=_REQ_TRACK_PID, tid=req.rid,
+                                    slot=slot)
         if admitted:
             self._begin_prefill_batch(admitted)
         m.gauge("serving.queue_depth").set(len(self.pending))
@@ -796,3 +867,34 @@ class Engine:
             self.metrics.gauge("serving.prefix_cache.size").set(
                 len(self.prefix))
         return self.metrics.snapshot()
+
+    def debug_requests(self, max_done: int = 32) -> List[Dict[str, Any]]:
+        """JSON-serializable state of every request the engine knows:
+        in-flight requests (queued / prefill / decode) in full, finished
+        ones capped to the most recent `max_done` so a long-lived server's
+        `/debug/requests` response stays bounded."""
+        now = time.perf_counter()
+        rows: List[Dict[str, Any]] = []
+        done_rows: List[Dict[str, Any]] = []
+        for rid, req in self.requests.items():
+            if req.done:
+                state = "done"
+            elif req.slot < 0:
+                state = "queued"
+            elif req.slot in self._prefill_pos \
+                    and self._prefill_pos[req.slot] < len(req.prompt) \
+                    or not req.first_tok_t:
+                state = "prefill"
+            else:
+                state = "decode"
+            row = {"rid": rid, "state": state, "slot": req.slot,
+                   "prompt_tokens": len(req.prompt),
+                   "out_tokens": len(req.out),
+                   "max_new": req.max_new,
+                   "finish_reason": req.finish_reason or None,
+                   "age_s": round(now - req.submit_t, 4)
+                   if req.submit_t else None,
+                   "deadline_s": req.deadline_s,
+                   "degraded": req.degraded}
+            (done_rows if req.done else rows).append(row)
+        return rows + done_rows[-max_done:]

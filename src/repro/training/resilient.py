@@ -30,6 +30,7 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.faults.plan import FaultInjector, TransientFault
+from repro.obs.flight import flight
 from repro.training.loop import TrainState, _split_batch
 
 
@@ -101,13 +102,17 @@ def train_with_recovery(
             if (manager is not None and checkpoint_every
                     and step % checkpoint_every == 0):
                 manager.save(step, state, {"data_step": loader.step})
-        except TransientFault:
+        except TransientFault as e:
             restarts += 1
             if registry is not None:
                 registry.counter("train.recoveries").inc()
                 registry.gauge("train.recovery.restarts").set(restarts)
             if restarts > max_restarts:
+                flight.record("train.recovery.gave_up", step=step,
+                              restarts=restarts, exc=str(e))
                 raise
+            flight.record("train.recovery.restart", step=step,
+                          restart=restarts, exc=str(e))
             time.sleep(min(backoff_base_s * (2 ** (restarts - 1)),
                            backoff_max_s))
             got = manager.restore_latest(state) if manager is not None \
@@ -117,6 +122,7 @@ def train_with_recovery(
                 loader.load_state_dict(
                     {"step": meta.get("data_step", step),
                      "seed": loader.source.seed})
+                flight.record("train.recovery.rewound", step=step)
             # no verified checkpoint: the fault fired before the step
             # mutated state, so continuing in-memory is safe
     if manager is not None and checkpoint_every:

@@ -227,15 +227,79 @@ def test_openmetrics_golden_text():
         "serving_queue_depth 3.0\n"
         "# TYPE serving_tokens counter\n"
         "serving_tokens_total 42\n"
-        "# TYPE serving_ttft_s summary\n"
-        'serving_ttft_s{quantile="0.5"} 0.5\n'
-        'serving_ttft_s{quantile="0.9"} 1.0\n'
-        'serving_ttft_s{quantile="0.99"} 1.0\n'
+        "# TYPE serving_ttft_s histogram\n"
+        'serving_ttft_s_bucket{le="0.001"} 0\n'
+        'serving_ttft_s_bucket{le="0.0025"} 0\n'
+        'serving_ttft_s_bucket{le="0.005"} 0\n'
+        'serving_ttft_s_bucket{le="0.01"} 0\n'
+        'serving_ttft_s_bucket{le="0.025"} 0\n'
+        'serving_ttft_s_bucket{le="0.05"} 0\n'
+        'serving_ttft_s_bucket{le="0.1"} 0\n'
+        'serving_ttft_s_bucket{le="0.25"} 2\n'
+        'serving_ttft_s_bucket{le="0.5"} 3\n'
+        'serving_ttft_s_bucket{le="1.0"} 4\n'
+        'serving_ttft_s_bucket{le="2.5"} 4\n'
+        'serving_ttft_s_bucket{le="5.0"} 4\n'
+        'serving_ttft_s_bucket{le="10.0"} 4\n'
+        'serving_ttft_s_bucket{le="+Inf"} 4\n'
         "serving_ttft_s_count 4\n"
         "serving_ttft_s_sum 2.0\n"
         "# EOF\n")
     # a snapshot dict renders identically to the live registry
     assert obs.to_openmetrics(reg.snapshot()) == got
+
+
+def test_openmetrics_bucketless_snapshot_falls_back_to_summary():
+    """Foreign / pre-bucket snapshot dicts still render (as summaries)."""
+    snap = {"ttft": {"type": "histogram", "count": 2, "sum": 3.0,
+                     "p50": 1.0, "p90": 2.0, "p99": 2.0}}
+    text = obs.to_openmetrics(snap)
+    assert "# TYPE ttft summary" in text
+    assert 'ttft{quantile="0.5"} 1.0' in text
+    assert text.endswith("# EOF\n")
+
+
+def test_histogram_buckets_cumulative_and_custom():
+    reg = Registry()
+    h = reg.histogram("lat", buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0, 5.0):
+        h.observe(v)
+    s = reg.snapshot()["lat"]
+    assert s["buckets"] == [[1.0, 1], [10.0, 3], ["+Inf", 4]]
+    text = obs.to_openmetrics(reg)
+    assert 'lat_bucket{le="1.0"} 1' in text
+    assert 'lat_bucket{le="10.0"} 3' in text
+    assert 'lat_bucket{le="+Inf"} 4' in text
+    # same name returns the same instrument (buckets pinned at creation)
+    assert reg.histogram("lat") is h
+
+
+def test_histogram_snapshot_concurrent_with_observe():
+    """A scrape racing a writer thread must never tear: count == +Inf
+    cumulative bucket count == reservoir-backed count in every snapshot."""
+    import threading as _t
+    reg = Registry()
+    h = reg.histogram("h")
+    stop = _t.Event()
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            h.observe(i * 0.001)
+            i += 1
+
+    th = _t.Thread(target=writer)
+    th.start()
+    try:
+        for _ in range(200):
+            s = reg.snapshot()["h"]
+            if s["count"] == 0:
+                continue
+            assert s["buckets"][-1][1] == s["count"]
+            assert s["count"] * s["mean"] == pytest.approx(s["sum"])
+    finally:
+        stop.set()
+        th.join()
 
 
 def test_openmetrics_name_sanitization_and_empty():

@@ -1,0 +1,327 @@
+"""Live observability plane: HTTP endpoints, flight recorder, per-kernel
+launch telemetry, and the default-off bit-identity contract."""
+import glob
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import pytest
+
+from repro import obs
+from repro.configs import reduced_config
+from repro.core.simt.machine import MachineConfig, launch_log
+from repro.models import api
+from repro.obs.flight import FlightRecorder, flight, validate_flight
+from repro.obs.server import OPENMETRICS_CONTENT_TYPE, Liveness, ObsServer
+from repro.serving.engine import Engine
+
+CFG = reduced_config("phi3-mini-3.8b").replace(num_layers=2)
+PARAMS = api.build_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(autouse=True)
+def _clean_globals():
+    """The tracer/flight/launch_log singletons are process-global; leave
+    them exactly as found so test order never matters."""
+    yield
+    obs.tracer.disable()
+    obs.tracer.clear()
+    flight.disable()
+    flight.clear()
+    launch_log.disable()
+    launch_log.clear()
+
+
+def _get(url, timeout=5):
+    try:
+        r = urllib.request.urlopen(url, timeout=timeout)
+        return r.status, dict(r.headers), r.read()
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), e.read()
+
+
+# ---------------------------------------------------------------------------
+# HTTP plane
+# ---------------------------------------------------------------------------
+
+def test_metrics_endpoint_serves_openmetrics():
+    reg = obs.Registry()
+    reg.counter("reqs").inc(3)
+    reg.histogram("lat_s").observe(0.2)
+    with ObsServer(port=0, registries=[reg]) as srv:
+        code, headers, body = _get(f"http://127.0.0.1:{srv.port}/metrics")
+    assert code == 200
+    assert headers["Content-Type"] == OPENMETRICS_CONTENT_TYPE
+    text = body.decode()
+    assert "reqs_total 3" in text
+    assert '_bucket{le="' in text
+    assert 'le="+Inf"' in text
+    assert text.endswith("# EOF\n")
+
+
+def test_healthz_transitions_and_status_codes():
+    live = Liveness(max_age_s=0.05)
+    with ObsServer(port=0, health=live) as srv:
+        url = f"http://127.0.0.1:{srv.port}/healthz"
+        code, _, body = _get(url)
+        assert code == 200 and json.loads(body)["state"] == "starting"
+        live.beat()
+        code, _, body = _get(url)
+        assert code == 200 and json.loads(body)["state"] == "live"
+        time.sleep(0.1)            # beat ages past max_age_s -> stalled
+        code, _, body = _get(url)
+        assert code == 503 and json.loads(body)["state"] == "stalled"
+        live.done()
+        code, _, body = _get(url)
+        assert code == 200 and json.loads(body)["state"] == "finished"
+
+
+def test_debug_endpoints_and_unknown_path():
+    fr = FlightRecorder()
+    fr.enable()
+    fr.record("x", a=1)
+    reqs = lambda: [{"rid": 0, "state": "decode"}]
+    with ObsServer(port=0, requests=reqs, flight=fr) as srv:
+        base = f"http://127.0.0.1:{srv.port}"
+        code, _, body = _get(f"{base}/debug/requests")
+        assert code == 200 and json.loads(body)[0]["state"] == "decode"
+        code, _, body = _get(f"{base}/debug/flight")
+        doc = json.loads(body)
+        assert code == 200 and doc["enabled"] and len(doc["events"]) == 1
+        code, _, body = _get(f"{base}/nope")
+        assert code == 404 and "/metrics" in json.loads(body)["paths"]
+
+
+def test_requests_endpoint_404_without_source():
+    with ObsServer(port=0) as srv:
+        code, _, _ = _get(f"http://127.0.0.1:{srv.port}/debug/requests")
+    assert code == 404
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+def test_flight_ring_bounds_and_drop_accounting():
+    fr = FlightRecorder(capacity=8)
+    fr.enable()
+    for i in range(20):
+        fr.record("tick", i=i)
+    assert len(fr) == 8
+    assert fr.dropped == 12
+    evs = fr.snapshot()
+    # ring keeps the newest events; seq survives eviction
+    assert [e["i"] for e in evs] == list(range(12, 20))
+    assert evs[-1]["seq"] == 20
+
+
+def test_flight_dump_roundtrip_validates(tmp_path):
+    fr = FlightRecorder(capacity=16)
+    fr.enable()
+    reg = obs.Registry()
+    reg.counter("c").inc(5)
+    fr.add_metrics_source(reg)
+    for i in range(20):
+        fr.record("e", i=i)
+    path = fr.dump(str(tmp_path), reason="test")
+    doc = json.load(open(path))
+    validate_flight(doc)
+    assert doc["reason"] == "test"
+    assert doc["dropped"] == 4 and doc["n_events"] == 16
+    (snap,) = doc["metrics"].values()
+    assert snap["c"]["value"] == 5
+
+
+def test_flight_crash_dump_records_exception(tmp_path):
+    fr = FlightRecorder()
+    fr.enable()
+    path = fr.crash_dump(str(tmp_path), ValueError("boom"))
+    doc = json.load(open(path))
+    validate_flight(doc)
+    assert doc["reason"] == "crash"
+    assert doc["events"][-1]["kind"] == "crash"
+    assert doc["events"][-1]["exc_type"] == "ValueError"
+
+
+def test_flight_mirrors_tracer_spans_not_metadata():
+    fr = FlightRecorder()
+    fr.enable()
+    tr = obs.Tracer()
+    tr.enable()
+    fr.attach_tracer(tr)
+    with tr.span("work", rid=7):
+        pass
+    tr.instant("marker")
+    tr.thread_name(1, 7, "req 7")       # metadata: must NOT be mirrored
+    kinds = [(e["kind"], e.get("name")) for e in fr.snapshot()]
+    assert ("span", "work") in kinds
+    assert ("span", "marker") in kinds
+    assert ("span", "thread_name") not in kinds
+
+
+def test_flight_disabled_fast_path_records_nothing():
+    fr = FlightRecorder()
+    fr.record("e")
+    assert len(fr) == 0 and fr.dropped == 0
+    assert fr.crash_dump("/nonexistent", ValueError()) is None
+
+
+# ---------------------------------------------------------------------------
+# default-off discipline: no allocation, bit-identical serving
+# ---------------------------------------------------------------------------
+
+def test_disabled_telemetry_allocates_nothing():
+    # disabled tracer: span() returns ONE shared no-op object
+    assert obs.tracer.span("a") is obs.tracer.span("b")
+    n_events = len(obs.tracer.snapshot_events())
+    obs.tracer.instant("x")
+    obs.tracer.complete("y", 0.0, 1.0)
+    obs.tracer.thread_name(1, 2, "z")
+    assert len(obs.tracer.snapshot_events()) == n_events
+    # disabled flight: the ring and the global seq stay untouched
+    seq0 = flight._seq
+    flight.record("e", heavy="payload")
+    assert flight._seq == seq0 and len(flight) == 0
+
+
+def _run_engine():
+    eng = Engine(CFG, PARAMS, n_slots=4, max_len=64, prefill_chunk=8,
+                 prefix_cache_entries=8, eos_id=-1)
+    shared = [7, 7, 7, 7, 7, 7, 7, 7]
+    for i in range(5):
+        eng.submit(shared + [11 + i, 13 + i, 17 + i], max_new=4)
+    eng.run()
+    return eng
+
+
+GATE_KEYS = ("serving.prefix_cache.hits", "serving.prefill_chunks",
+             "serving.recompiles.prefill_chunk", "serving.tokens")
+
+
+def test_enabling_obs_plane_is_bit_identical():
+    """The acceptance contract: tokens and every gated counter are
+    bit-identical with the full plane on (tracer + flight + HTTP server
+    scraping mid-run) vs everything off."""
+    base = _run_engine()
+    base_res = base.results()
+    base_snap = base.metrics_snapshot()
+
+    obs.tracer.enable()
+    flight.enable()
+    flight.attach_tracer(obs.tracer)
+    eng = Engine(CFG, PARAMS, n_slots=4, max_len=64, prefill_chunk=8,
+                 prefix_cache_entries=8, eos_id=-1)
+    with ObsServer(port=0, registries=[eng.metrics],
+                   health=eng.liveness, requests=eng.debug_requests,
+                   flight=flight) as srv:
+        shared = [7, 7, 7, 7, 7, 7, 7, 7]
+        for i in range(5):
+            eng.submit(shared + [11 + i, 13 + i, 17 + i], max_new=4)
+        eng.run()
+        # scrape the live plane while it's attached to the engine
+        code, _, body = _get(f"http://127.0.0.1:{srv.port}/metrics")
+        assert code == 200 and body.decode().endswith("# EOF\n")
+        code, _, _ = _get(f"http://127.0.0.1:{srv.port}/debug/requests")
+        assert code == 200
+    snap = eng.metrics_snapshot()
+
+    assert eng.results() == base_res
+    for key in GATE_KEYS:
+        assert snap[key]["value"] == base_snap[key]["value"], key
+    # and the plane actually observed the run
+    assert any(e["kind"] == "serving.finish" for e in flight.snapshot())
+
+
+# ---------------------------------------------------------------------------
+# per-kernel SIMT launch telemetry
+# ---------------------------------------------------------------------------
+
+def test_launch_log_per_kernel_reports():
+    from repro.runtime.kernels_src import rodinia
+    launch_log.enable()
+    mc = MachineConfig(warps=4, threads=4)
+    _, ok = rodinia.gaussian(mc, n=8)
+    assert ok
+    per = launch_log.per_kernel()
+    assert set(per) == {"gaussian:fan1", "gaussian:fan2"}
+    assert per["gaussian:fan1"]["launches"] == 1
+    assert per["gaussian:fan1"]["cycles"] > 0
+    reps = launch_log.reports(mc)
+    # one PerfReport per kernel launch, not one blurred per-run report
+    assert reps["gaussian:fan1"].ipc != reps["gaussian:fan2"].ipc
+
+
+def test_launch_telemetry_off_by_default():
+    from repro.runtime.kernels_src import rodinia
+    mc = MachineConfig(warps=2, threads=4)
+    _, ok = rodinia.vecadd(mc, n=32)
+    assert ok
+    assert launch_log.records == []
+    assert len(flight) == 0
+
+
+# ---------------------------------------------------------------------------
+# the acceptance test: serve --metrics-port --chaos-seed end to end
+# ---------------------------------------------------------------------------
+
+def test_serve_cli_chaos_smoke(tmp_path):
+    """`serve --metrics-port 0 --chaos-seed 1234 --flight-dir ...` serves
+    valid OpenMetrics + /healthz while handling traffic, and the seeded
+    fault leaves a schema-valid flight dump containing the fault firing,
+    the watchdog retry, and the requests' finish reasons."""
+    from repro.launch import serve
+    serve.last_server = None
+    out = {}
+
+    def run():
+        out["rc"] = serve.main([
+            "--arch", "phi3-mini-3.8b", "--reduced", "--requests", "5",
+            "--slots", "4", "--max-new", "8", "--max-len", "128",
+            "--metrics-port", "0", "--chaos-seed", "1234",
+            "--flight-dir", str(tmp_path)])
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    deadline = time.time() + 240
+    while serve.last_server is None and time.time() < deadline:
+        time.sleep(0.05)
+    assert serve.last_server is not None, "server never started"
+    port = serve.last_server.port
+
+    scraped = {}
+    while t.is_alive() and time.time() < deadline:
+        try:
+            code, headers, body = _get(
+                f"http://127.0.0.1:{port}/metrics", timeout=2)
+            if code == 200:
+                scraped["ct"] = headers["Content-Type"]
+                scraped["body"] = body.decode()
+            code, _, hb = _get(f"http://127.0.0.1:{port}/healthz",
+                               timeout=2)
+            scraped["health"] = (code, json.loads(hb))
+        except (urllib.error.URLError, ConnectionError, OSError):
+            pass               # server may be shutting down mid-scrape
+        time.sleep(0.1)
+    t.join(timeout=240)
+    assert out.get("rc") == 0
+
+    # live scrape happened and was valid OpenMetrics
+    assert scraped["ct"] == OPENMETRICS_CONTENT_TYPE
+    assert scraped["body"].endswith("# EOF\n")
+    assert "serving_tokens_total" in scraped["body"]
+    code, health = scraped["health"]
+    assert code in (200, 503) and "state" in health
+
+    # the run left a schema-valid forensic artifact
+    dumps = sorted(glob.glob(str(tmp_path / "flight_*.json")))
+    assert dumps, "no flight dump written"
+    doc = json.load(open(dumps[-1]))
+    validate_flight(doc)
+    kinds = [e["kind"] for e in doc["events"]]
+    assert "fault.fired" in kinds
+    assert "serving.watchdog.retry" in kinds
+    finishes = [e for e in doc["events"] if e["kind"] == "serving.finish"]
+    assert finishes and all(e.get("reason") for e in finishes)
