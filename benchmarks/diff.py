@@ -34,12 +34,22 @@ A metric present only in the baseline (or only in the current run) is a
 failure — even for "report" metrics: silently dropping a gated metric
 is how regressions sneak in, and presence is deterministic where values
 are not.  Improvements are reported but never fail the gate.
+
+`--refresh` rewrites the committed baselines from the current artifacts
+(the sanctioned way to land a PR that intentionally shifts gated
+counters — see benchmarks/baselines/README.md; hand-editing baseline
+JSON is how drift happens):
+
+    PYTHONPATH=src python -m benchmarks.run --sections fig9_rodinia,serving
+    python -m benchmarks.diff --refresh
+    git add benchmarks/baselines/ && git commit
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import shutil
 import sys
 from typing import Dict, List, Tuple
 
@@ -144,7 +154,38 @@ def main(argv=None) -> int:
                     default=os.environ.get("REPRO_BENCH_OUT", "bench_out"))
     ap.add_argument("--files", default=",".join(GATED_FILES),
                     help="comma-separated subset of gated artifacts")
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite the committed baselines in place from "
+                         "the current artifacts instead of diffing — the "
+                         "sanctioned path for PRs that intentionally "
+                         "shift gated counters (commit the result)")
     args = ap.parse_args(argv)
+
+    if args.refresh:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        refreshed = 0
+        for fname in [f for f in args.files.split(",") if f]:
+            if fname not in EXTRACTORS:
+                ap.error(f"unknown gated file {fname!r} "
+                         f"(choose from {GATED_FILES})")
+            cpath = os.path.join(args.current_dir, fname)
+            if not os.path.exists(cpath):
+                # keep the old baseline: refreshing from a partial run
+                # must not silently drop a gated artifact
+                print(f"  skip {fname}: no current artifact in "
+                      f"{args.current_dir}/ (baseline kept)")
+                continue
+            # validate before overwriting: a truncated artifact must not
+            # become the baseline
+            with open(cpath) as f:
+                doc = json.load(f)
+            EXTRACTORS[fname](doc, doc)
+            shutil.copyfile(cpath, os.path.join(args.baseline_dir, fname))
+            refreshed += 1
+            print(f"  refreshed {fname} <- {cpath}")
+        print(f"\nbench-gate: {refreshed} baseline(s) rewritten in "
+              f"{args.baseline_dir}/ — review and commit them")
+        return 0
 
     missing_artifact = False
     all_failures: List[str] = []

@@ -10,7 +10,13 @@ Two workloads over a tiny reduced config (CI-sized, CPU-friendly):
 
 Each workload runs once per prefill mode on a pre-warmed engine (one
 warmup request absorbs jit compiles, and — for shared_prefix — seeds
-the prefix cache, i.e. the shared-system-prompt steady state).  Emits
+the prefix cache, i.e. the shared-system-prompt steady state).  The
+shared_prefix workload additionally runs once on the paged KV layout
+(``--kv-layout paged``): the same chunked engine, but a prefix hit pins
+the entry's pages into the hitter's block table (refcount bump) instead
+of copying the cached KV slab — the bench gates ``pages_shared`` and
+``pages_copied`` exactly (the 128-token prefix is page-aligned, so a
+correct copy-on-write never copies a page here).  Emits
 ``BENCH_serving.json``: raw per-mode latencies under "workloads", plus
 a machine-portable "gate" section (deterministic counters + wall-clock
 *ratios*) that ``benchmarks/diff.py`` checks against the committed
@@ -33,7 +39,8 @@ N_SLOTS = 8
 CHUNK = 32
 MAX_LEN = 256
 MAX_NEW = 4
-SEED = 0
+PAGE_SIZE = 32                # PREFIX_LEN % PAGE_SIZE == 0: hits pin
+SEED = 0                      # whole pages, zero copy-on-write splits
 
 
 def _build():
@@ -44,11 +51,12 @@ def _build():
     return cfg, params
 
 
-def _engine(cfg, params, mode: str):
+def _engine(cfg, params, mode: str, kv_layout: str = "contiguous"):
     from repro.serving.engine import Engine
     return Engine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
                   prompt_bucket=64, prefill_chunk=CHUNK, prefill_mode=mode,
-                  prefix_cache_entries=64, eos_id=-1)
+                  prefix_cache_entries=64, eos_id=-1, kv_layout=kv_layout,
+                  kv_page_size=PAGE_SIZE)
 
 
 def make_workloads(seed: int = SEED) -> Dict[str, Dict[str, List[List[int]]]]:
@@ -106,7 +114,8 @@ def run_all() -> dict:
         "config": {"arch": "phi3-mini-3.8b/reduced-2L", "slots": N_SLOTS,
                    "chunk": CHUNK, "max_len": MAX_LEN, "max_new": MAX_NEW,
                    "requests": N_REQUESTS, "prefix_len": PREFIX_LEN,
-                   "tail_len": TAIL_LEN, "seed": SEED},
+                   "tail_len": TAIL_LEN, "kv_page_size": PAGE_SIZE,
+                   "seed": SEED},
         "workloads": {},
     }
     snapshots = {}
@@ -122,10 +131,20 @@ def run_all() -> dict:
         per_mode["tokens_per_s_ratio"] = (
             per_mode["chunked"]["tokens_per_s"]
             / max(per_mode["legacy"]["tokens_per_s"], 1e-9))
+        if wname == "shared_prefix":
+            # the paged-KV headline: same chunked engine, but prefix
+            # hits pin pages instead of copying the cached KV slab
+            eng = _engine(cfg, params, "chunked", kv_layout="paged")
+            per_mode["paged"] = run_workload(eng, wl["warmup"],
+                                             wl["prompts"])
+            snapshots[(wname, "paged")] = eng.metrics_snapshot()
+            per_mode["paged_ttft_ratio"] = (
+                per_mode["chunked"]["ttft_mean_s"]
+                / max(per_mode["paged"]["ttft_mean_s"], 1e-9))
         doc["workloads"][wname] = per_mode
 
-    def ctr(wname, name):
-        return snapshots[(wname, "chunked")].get(name, {}).get("value", 0)
+    def ctr(wname, name, mode="chunked"):
+        return snapshots[(wname, mode)].get(name, {}).get("value", 0)
 
     # gate metrics, in three reliability tiers (the spec travels with
     # the committed baseline — benchmarks/diff.py reads it from there):
@@ -155,6 +174,21 @@ def run_all() -> dict:
         "chunked_prefill_recompiles": {
             "value": ctr("shared_prefix", "serving.recompiles.prefill_chunk"),
             "better": "lower", "tol": 0.0, "abs_tol": 2},
+        # paged KV: sharing is pure allocator arithmetic over a fixed
+        # workload -> pinned exact.  The 128-token prefix is page-aligned
+        # (PAGE_SIZE divides PREFIX_LEN), so a correct COW never copies a
+        # page here — pages_copied gates at literally zero.
+        "paged_shared_prefix_pages_shared": {
+            "value": ctr("shared_prefix", "serving.kv.pages_shared",
+                         mode="paged"),
+            "better": "higher", "tol": 0.0},
+        "paged_shared_prefix_pages_copied": {
+            "value": ctr("shared_prefix", "serving.kv.pages_copied",
+                         mode="paged"),
+            "better": "lower", "tol": 0.0},
+        "paged_shared_prefix_ttft_ratio": {
+            "value": doc["workloads"]["shared_prefix"]["paged_ttft_ratio"],
+            "better": "higher", "tol": 0.5, "mode": "report"},
     }
     doc["metrics"] = {f"{w}/{m}": snap
                       for (w, m), snap in snapshots.items()}
@@ -164,12 +198,16 @@ def run_all() -> dict:
 def print_table(doc: dict) -> None:
     print("workload,mode,ttft_mean_s,ttft_max_s,tokens_per_s")
     for wname, per_mode in doc["workloads"].items():
-        for mode in ("legacy", "chunked"):
+        for mode in ("legacy", "chunked", "paged"):
+            if mode not in per_mode:
+                continue
             r = per_mode[mode]
             print(f"{wname},{mode},{r['ttft_mean_s']:.4f},"
                   f"{r['ttft_max_s']:.4f},{r['tokens_per_s']:.1f}")
         print(f"# {wname}: ttft speedup {per_mode['ttft_speedup']:.2f}x, "
-              f"throughput ratio {per_mode['tokens_per_s_ratio']:.2f}x")
+              f"throughput ratio {per_mode['tokens_per_s_ratio']:.2f}x"
+              + (f", paged ttft ratio {per_mode['paged_ttft_ratio']:.2f}x"
+                 if "paged_ttft_ratio" in per_mode else ""))
 
 
 def main(out_dir=None) -> dict:

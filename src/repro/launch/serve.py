@@ -7,6 +7,10 @@ Chunked-prefill / prefix-cache knobs (see src/repro/serving/README.md):
 `--prefill-chunk`, `--prefill-mode`, `--prefix-cache-entries`,
 `--shared-prefix` (prepends a common system-prompt prefix to every
 request so the prefix cache has something to hit).
+
+Paged-KV knobs (serving/kv_pool.py): `--kv-layout {contiguous,paged}`,
+`--kv-page-size`, `--kv-pages` — with `paged`, prefix-cache hits pin
+shared pages instead of copying (contiguous stays the default).
 """
 from __future__ import annotations
 
@@ -49,6 +53,18 @@ def main(argv=None) -> int:
                     help="LRU capacity of the KV prefix cache; 0 disables")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend a common N-token prefix to every request")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="KV cache layout: 'paged' shares prefix pages "
+                         "via block tables + copy-on-write (requires "
+                         "chunked prefill); 'contiguous' is the classic "
+                         "per-slot slab")
+    ap.add_argument("--kv-page-size", type=int, default=32,
+                    help="tokens per KV page (paged layout); max-len "
+                         "must be a multiple of it")
+    ap.add_argument("--kv-pages", type=int, default=None, metavar="N",
+                    help="total pages in the KV pool; default sizes "
+                         "every slot's worst case plus headroom")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome/Perfetto trace of the run here")
     ap.add_argument("--chaos-seed", type=int, default=None, metavar="SEED",
@@ -86,6 +102,9 @@ def main(argv=None) -> int:
                  prefill_chunk=args.prefill_chunk,
                  prefill_mode=args.prefill_mode,
                  prefix_cache_entries=args.prefix_cache_entries,
+                 kv_layout=args.kv_layout,
+                 kv_page_size=args.kv_page_size,
+                 kv_pages=args.kv_pages,
                  faults=injector,
                  default_deadline_s=args.deadline_s,
                  max_queue=args.max_queue)
@@ -145,7 +164,10 @@ def main(argv=None) -> int:
     for key in ("serving.prefix_cache.hits", "serving.prefix_cache.misses",
                 "serving.prefix_cache.evictions", "serving.prefill_chunks",
                 "serving.recompiles.prefill",
-                "serving.recompiles.prefill_chunk"):
+                "serving.recompiles.prefill_chunk",
+                "serving.kv.pages_shared", "serving.kv.pages_copied",
+                "serving.kv.cow_splits", "serving.kv.admit_blocked",
+                "serving.kv.free_pages", "serving.kv.pool_occupancy"):
         if key in snap:
             print(f"  {key}: {snap[key].get('value')}", flush=True)
     if injector is not None:

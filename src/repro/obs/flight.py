@@ -36,9 +36,32 @@ import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional
 
-__all__ = ["FlightRecorder", "flight", "validate_flight", "SCHEMA"]
+__all__ = ["FlightRecorder", "flight", "validate_flight", "SCHEMA",
+           "EVENT_KINDS"]
 
 SCHEMA = "repro.flight/1"
+
+# Every event kind the stack records, by layer.  `validate_flight`
+# checks dumps against this table when asked (`strict_kinds=True`) so a
+# renamed or mistyped kind fails CI instead of silently orphaning its
+# consumers; ad-hoc kinds in user code stay legal by default.
+EVENT_KINDS = frozenset({
+    # serving engine
+    "serving.admit", "serving.first_token", "serving.finish",
+    "serving.watchdog.retry", "serving.watchdog.slow_tick",
+    "serving.watchdog.gave_up",
+    # paged KV pool (serving/kv_pool.py)
+    "kv.oom",        # admission blocked: pool can't cover a request
+    "kv.evict",      # prefix entry evicted (LRU overflow or pressure)
+    "kv.cow",        # copy-on-write split of a shared partial page
+    # faults / checkpoint / training
+    "fault.fired",
+    "ckpt.save", "ckpt.restore",
+    "train.recovery.restart", "train.recovery.rewound",
+    "train.recovery.gave_up",
+    # SIMT machine + recorder plumbing
+    "simt.launch", "span", "crash",
+})
 
 
 class FlightRecorder:
@@ -188,9 +211,15 @@ class FlightRecorder:
                                 "exc": str(exc)})
 
 
-def validate_flight(doc: Dict[str, Any]) -> None:
+def validate_flight(doc: Dict[str, Any], *, strict_kinds: bool = False
+                    ) -> None:
     """Schema-validate a flight dump (raises AssertionError).  Checked by
-    the chaos CI smoke so dumps stay machine-consumable."""
+    the chaos CI smoke so dumps stay machine-consumable.
+
+    `strict_kinds=True` additionally requires every event kind to appear
+    in :data:`EVENT_KINDS` — use it on dumps produced by the stack's own
+    instrumentation (CI smokes); leave it off for dumps that interleave
+    ad-hoc user events."""
     assert doc.get("schema") == SCHEMA, f"bad schema: {doc.get('schema')!r}"
     for key in ("reason", "pid", "epoch_unix", "written_unix", "capacity",
                 "n_events", "dropped", "events", "metrics"):
@@ -205,6 +234,9 @@ def validate_flight(doc: Dict[str, Any]) -> None:
             assert key in ev, f"event missing {key}: {ev!r}"
         assert ev["seq"] > prev_seq, "event seq not strictly increasing"
         prev_seq = ev["seq"]
+        if strict_kinds:
+            assert ev["kind"] in EVENT_KINDS, \
+                f"unknown event kind {ev['kind']!r} (add it to EVENT_KINDS)"
     assert isinstance(doc["metrics"], dict)
 
 

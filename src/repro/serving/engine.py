@@ -22,6 +22,16 @@ serving benchmark measures speedups against.
 Ragged lengths: the cache pool's `len` is a per-slot [B] vector (see
 models/attention.py decode path).
 
+KV layout (`kv_layout=`): "contiguous" gives every slot a private
+[max_len] slab; "paged" (serving/kv_pool.py) keeps KV in a fixed pool
+of fixed-size pages addressed through per-slot block tables — prefix
+hits PIN shared pages (refcount bump) instead of copying, only the
+last partial page of a shared prefix is ever copied (copy-on-write),
+and admission requires the pool to cover a request's worst case.  The
+jitted paged steps gather the contiguous view from the pool, run the
+unchanged model forward, and scatter back only dirty pages — greedy
+decode is bit-identical across layouts (gated by tests).
+
 Failure semantics (serving/README.md "Failure semantics"): per-request
 deadlines/TTLs (finish reason "timeout"), a bounded admission queue with
 a shed policy ("shed"), an in-jit NaN/Inf logit guard that degrades to
@@ -51,7 +61,9 @@ from repro.obs.flight import flight
 # queue wait -> prefill chunks -> decode -> finish)
 _REQ_TRACK_PID = 1
 from repro.models import api
-from repro.serving.prefix_cache import PrefixCache
+from repro.serving import kv_pool
+from repro.serving.kv_pool import PagedKV, PagePool
+from repro.serving.prefix_cache import PrefixCache, PrefixEntry
 from repro.serving.sampler import (SamplerConfig, logit_entropy,
                                    sample_guarded)
 from repro.serving.scheduler import RequestScheduler
@@ -84,6 +96,9 @@ class Engine:
                  prefill_chunk: int = 32,
                  prefill_mode: str = "auto",
                  prefix_cache_entries: int = 32,
+                 kv_layout: str = "contiguous",
+                 kv_page_size: int = 32,
+                 kv_pages: Optional[int] = None,
                  faults: Optional[FaultInjector] = None,
                  max_queue: Optional[int] = None,
                  shed_policy: str = "reject-new",
@@ -96,6 +111,17 @@ class Engine:
         model family supports chunk-append cache writes and the cache
         layout is non-ring).  prefix_cache_entries bounds the LRU pool
         of KV prefix snapshots; 0 disables prefix caching entirely.
+
+        kv_layout: 'contiguous' (default — every slot owns a private
+        [max_len] KV slab) or 'paged' (KV lives in a fixed pool of
+        `kv_pages` pages of `kv_page_size` tokens; slots hold block
+        tables; prefix-cache hits PIN shared pages instead of copying,
+        with copy-on-write on the last partial page — see
+        serving/kv_pool.py).  Paged requires chunked prefill.  The
+        default pool size gives every slot its worst case plus one page
+        of headroom, so admission never deadlocks; smaller pools admit
+        only when the pool covers a request's worst case, evicting LRU
+        prefix entries under pressure.
 
         Failure semantics (see serving/README.md):
           faults              optional FaultInjector; every hook is a
@@ -169,12 +195,8 @@ class Engine:
         # and the prompt's chunk-hash chain, kept while the slot prefills
         self._prefill_pos: Dict[int, int] = {}
         self._chunk_hashes: Dict[int, List[str]] = {}
+        self._last_oom_rid = -1
 
-        # pool caches: per-slot len vector (self.lens is its host mirror)
-        self.caches = api.init_caches(cfg, n_slots, max_len)
-        self.caches["len"] = jnp.zeros(n_slots, jnp.int32)
-        self.lens = np.zeros(n_slots, np.int32)
-        self.last_tok = np.zeros(n_slots, np.int32)
         # structural slot-axis map: the axis whose size changes with the
         # slot count (shape-matching heuristics collide when e.g.
         # num_layers == n_slots)
@@ -195,6 +217,54 @@ class Engine:
         # (exactly what chunk-prefilling slots do).
         self._slot_ax["len"] = 0
 
+        assert kv_layout in ("contiguous", "paged")
+        self.kv_layout = kv_layout
+        self._kv: Optional[PagedKV] = None
+        if kv_layout == "paged":
+            assert self.prefill_mode == "chunked", \
+                "paged KV requires chunked prefill (the legacy bucketed " \
+                "path writes whole [1, bucket] slabs, not pages)"
+            assert kv_page_size > 0 and max_len % kv_page_size == 0, \
+                "max_len must be a multiple of kv_page_size (block " \
+                "tables cover whole pages)"
+            pps = max_len // kv_page_size
+            if kv_pages is None:
+                # worst case for every slot plus one page of headroom
+                # each: admission can always succeed once prefix entries
+                # are evicted, so paged scheduling never diverges from
+                # contiguous under the default sizing
+                kv_pages = n_slots * (pps + 1)
+            self._kv = PagedKV(PagePool(kv_pages, kv_page_size),
+                               n_slots, pps)
+            # the device pool: contiguous leaves with (slot, seq) axes
+            # replaced by (n_pages + 1 trash, page_size); `len` is not a
+            # pool leaf — the host `self.lens` is threaded through the
+            # jitted steps as a traced argument instead
+            self._pool_ax = {k: v for k, v in self._slot_ax.items()
+                             if k != "len"}
+            spec_tree = {k: v for k, v in s_a.items() if k != "len"}
+
+            def mk(spec, ax):
+                if ax is None or spec.shape[ax + 1] != max_len:
+                    raise ValueError(
+                        "kv_layout='paged' needs every cache leaf laid "
+                        f"out [.., slot, seq={max_len}, ..]; got "
+                        f"{spec.shape} (slot axis {ax}) — use contiguous")
+                return jnp.zeros(kv_pool.paged_leaf_shape(
+                    spec.shape, ax, kv_pages, kv_page_size), spec.dtype)
+
+            self.caches = jax.tree.map(mk, spec_tree, self._pool_ax)
+            if self.prefix is not None:
+                # paged entries hold ref-counted page chains; eviction
+                # (LRU overflow or pool pressure) releases them here
+                self.prefix.on_evict = self._on_prefix_evict
+        else:
+            # pool caches: per-slot len vector (self.lens is its mirror)
+            self.caches = api.init_caches(cfg, n_slots, max_len)
+            self.caches["len"] = jnp.zeros(n_slots, jnp.int32)
+        self.lens = np.zeros(n_slots, np.int32)
+        self.last_tok = np.zeros(n_slots, np.int32)
+
         # cache-pool buffers are donated: every step functionally updates
         # the pool, and without donation XLA must copy the whole pool per
         # call (the dominant cost at CPU scale)
@@ -205,6 +275,13 @@ class Engine:
         self._write_masked_fn = jax.jit(self._write_slots_masked_impl,
                                         donate_argnums=0)
         self._read_fn = jax.jit(self._read_slot_impl, static_argnums=2)
+        if kv_layout == "paged":
+            self._decode_paged_fn = jax.jit(self._decode_step_paged,
+                                            donate_argnums=1)
+            self._chunk_paged_fn = jax.jit(self._prefill_chunk_step_paged,
+                                           donate_argnums=1)
+            self._copy_page_fn = jax.jit(self._copy_page_impl,
+                                         donate_argnums=0)
         self._jit_sizes: Dict[str, int] = {}
 
     # ------------------------------------------------------------------ jit
@@ -279,6 +356,69 @@ class Engine:
         return (tok, self._masked_merge(new_caches, caches, sel), ctrs, ent,
                 bad)
 
+    # ---------------------------------------------------------- paged steps
+    #
+    # The paged twins of _decode_step / _prefill_chunk_step: gather the
+    # contiguous [n_slots, max_len] view through the read table, run the
+    # unchanged model forward on it, then scatter ONLY the dirty pages
+    # back (write table + mask from PagedKV.write_plan).  Unselected
+    # slots' table positions are masked off — their writes land on the
+    # trash page — so the masked-merge semantics survive the page layout
+    # without a separate select, and shared pages are physically
+    # unreachable from the write path.  One shape -> one compile,
+    # regardless of which requests hold which pages.
+
+    def _gather_view(self, pool, lens, read_tab):
+        view = kv_pool.gather_pages(pool, self._pool_ax, read_tab,
+                                    self.n_slots, self._kv.pages_per_slot,
+                                    self._kv.page_size)
+        view["len"] = lens
+        return view
+
+    def _scatter_view(self, pool, new_caches, write_tab, wmask):
+        src = {k: v for k, v in new_caches.items() if k != "len"}
+        return kv_pool.scatter_pages(pool, self._pool_ax, src, write_tab,
+                                     wmask, self.n_slots,
+                                     self._kv.pages_per_slot,
+                                     self._kv.page_size, self._kv.trash)
+
+    def _decode_step_paged(self, params, pool, lens, read_tab, write_tab,
+                           wmask, tokens, key, sel, fault_code):
+        caches = self._gather_view(pool, lens, read_tab)
+        logits, _aux, new_caches = api.forward(
+            params, {"tokens": tokens[:, None]}, self.cfg, mode="decode",
+            caches=caches, remat="none")
+        last = self._apply_logit_fault(logits[:, -1], fault_code)
+        tok, bad = sample_guarded(last, self.cfg.vocab_size, self.sampler,
+                                  key)
+        ctrs = obs.device_counters("sampled_tokens", "eos_sampled",
+                                   "nonfinite_logit_rows")
+        ctrs = obs.bump(ctrs, sampled_tokens=tok.shape[0],
+                        eos_sampled=jnp.sum(tok == self.eos_id),
+                        nonfinite_logit_rows=jnp.sum(bad & sel))
+        ent = jnp.mean(logit_entropy(last, self.cfg.vocab_size))
+        return (tok, self._scatter_view(pool, new_caches, write_tab, wmask),
+                ctrs, ent, bad)
+
+    def _prefill_chunk_step_paged(self, params, pool, lens, read_tab,
+                                  write_tab, wmask, tokens, last_idx, key):
+        caches = self._gather_view(pool, lens, read_tab)
+        logits, _aux, new_caches = api.forward(params, {"tokens": tokens},
+                                               self.cfg, mode="chunk",
+                                               caches=caches, remat="none")
+        last = jnp.take_along_axis(
+            logits, last_idx.reshape(-1, 1, 1).astype(jnp.int32),
+            axis=1)[:, 0]
+        tok, bad = sample_guarded(last, self.cfg.vocab_size, self.sampler,
+                                  key)
+        return (tok, self._scatter_view(pool, new_caches, write_tab, wmask),
+                bad)
+
+    def _copy_page_impl(self, pool, src, dst):
+        """One-page device copy (prefix-insert partial-page COW); src/dst
+        are traced scalars so one compile covers every copy ever."""
+        return kv_pool.copy_page(pool, self._pool_ax, src, dst)
+
     # ------------------------------------------------------------- requests
 
     def submit(self, prompt: Sequence[int], max_new: int = 32,
@@ -293,6 +433,15 @@ class Engine:
         if not prompt or len(prompt) >= self.max_len:
             raise ValueError(
                 f"prompt length must be in [1, {self.max_len - 1}]")
+        if self._kv is not None:
+            cap = min(len(prompt) + max_new, self.max_len)
+            need = self._kv.pages_for(cap)
+            if need > self._kv.pool.n_pages:
+                raise ValueError(
+                    f"request worst case ({need} pages of "
+                    f"{self._kv.page_size}) exceeds the pool "
+                    f"({self._kv.pool.n_pages} pages) — it could never "
+                    "admit")
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new=max_new,
@@ -446,6 +595,11 @@ class Engine:
         req.done = True
         req.finish_reason = reason
         if req.slot >= 0:
+            if self._kv is not None:
+                # drop every page reference the slot holds (shared prefix
+                # pins, private pages, unresolved pending-COW copies);
+                # pages whose refcount hits zero return to the free list
+                self._kv.release_slot(req.slot)
             self.sched.retire(req.slot)
             # drop the engine's slot->request pin: retired requests must
             # not stay reachable from the engine for its whole lifetime
@@ -498,6 +652,93 @@ class Engine:
         for req in list(self._slot_req.values()):
             if expired(req):
                 self._finish(req, "timeout")
+
+    # ------------------------------------------------------- paged admission
+
+    def _on_prefix_evict(self, entry: PrefixEntry) -> None:
+        """PrefixCache eviction hook (paged mode): release the entry's
+        page references.  Pages shared with live slots survive (refcount
+        > 0); unshared ones return to the free list."""
+        if entry.pages:
+            freed = self._kv.pool.release(entry.pages)
+            self.metrics.counter("serving.kv.evicted_pages").inc(
+                len(entry.pages))
+            flight.record("kv.evict", pages=len(entry.pages), freed=freed,
+                          n_tokens=entry.n_tokens)
+        self.metrics.counter("serving.prefix_cache.evictions").inc()
+
+    def _admit_paged(self, req: Request) -> int:
+        """Paged admission: admit only if a slot is free AND the pool
+        covers the request's worst case (`ceil(min(prompt + max_new,
+        max_len) / page_size)` pages, minus full pages pinned from a
+        prefix hit — a shared partial page still bills one fresh page
+        for its eager COW copy).  Pool pressure evicts LRU prefix
+        entries before giving up; a request that still doesn't fit stays
+        queued (`kv.oom` flight event + `serving.kv.admit_blocked`).
+
+        The prefix match happens HERE, not in a post-admission wave: the
+        hit pins the entry's pages (refcount bump, O(1) per hit) instead
+        of copying the prefix into the slot, and the pinned pages must
+        survive any pressure eviction of their own entry."""
+        if not bool((~self.sched.active).any()):
+            return -1
+        kv, m = self._kv, self.metrics
+        cap = min(len(req.prompt) + req.max_new, self.max_len)
+        matched, entry, hashes = 0, None, []
+        if self.prefix is not None:
+            matched, entry, hashes = self.prefix.match(req.prompt)
+        shared = list(entry.pages) if (matched and entry.pages) else []
+        if not shared:
+            matched = 0
+        else:
+            kv.pool.share(shared)        # pin before any pressure eviction
+        need = kv.fresh_pages_needed(cap, matched)
+        while (kv.pool.free_pages < need and self.prefix is not None
+               and len(self.prefix)):
+            self.prefix.evict_lru()      # releases pages via _on_prefix_evict
+        if kv.pool.free_pages < need:
+            if shared:
+                kv.pool.release(shared)
+            m.counter("serving.kv.admit_blocked").inc()
+            if self._last_oom_rid != req.rid:   # one flight event per
+                self._last_oom_rid = req.rid    # blocked request, not tick
+                flight.record("kv.oom", rid=req.rid, need_pages=need,
+                              free_pages=kv.pool.free_pages)
+            return -1
+        slot = self.sched.admit()
+        assert slot >= 0
+        kv.bind(slot, cap, matched, shared)
+        self._chunk_hashes[slot] = hashes
+        if self.prefix is not None:
+            n_chunks = matched // self.chunk
+            m.counter("serving.prefix_cache.hits").inc(n_chunks)
+            m.counter("serving.prefix_cache.misses").inc(
+                len(hashes) - n_chunks)
+            m.counter("serving.prefix_cache.hit_tokens").inc(matched)
+            if obs.tracer.enabled:
+                obs.tracer.instant(
+                    "prefix_hit" if matched else "prefix_miss",
+                    pid=_REQ_TRACK_PID, tid=req.rid, matched_tokens=matched)
+        if shared:
+            m.counter("serving.kv.pages_shared").inc(len(shared))
+        self.lens[slot] = matched
+        self._prefill_pos[slot] = matched
+        return slot
+
+    def _commit_cow(self, commits) -> None:
+        """Apply the tick's COW resolutions after the device step: point
+        tables at the freshly-written copies, drop the shared-page refs,
+        and account the split (one page written = the whole per-hit copy
+        cost; full shared pages are never copied)."""
+        if not commits:
+            return
+        self._kv.commit(commits)
+        m = self.metrics
+        m.counter("serving.kv.cow_splits").inc(len(commits))
+        m.counter("serving.kv.pages_copied").inc(len(commits))
+        for c in commits:
+            flight.record("kv.cow", slot=c.slot, pos=c.pos,
+                          old_page=c.old_page, new_page=c.new_page)
 
     def _begin_prefill_batch(self, admitted) -> None:
         """Admission-time prefix-cache lookup for a whole admission wave:
@@ -554,6 +795,25 @@ class Engine:
         n = len(hashes) * self.chunk
         if hkey in self.prefix:
             self.prefix.insert(hkey, None, n)       # recency refresh only
+        elif self._kv is not None:
+            # paged insert: the entry takes references on the slot's full
+            # pages (no copy); a trailing partial page is device-copied
+            # into a fresh page iff the donor will still write inside it.
+            # Under pool pressure the copy may be skipped — the entry is
+            # then truncated to its full pages.
+            kv = self._kv
+            if kv.pool.free_pages == 0 and n % kv.page_size:
+                self.prefix.evict_lru()  # make room for the partial copy
+            pages, copy, n_stored = kv.entry_pages(
+                slot, n, next_write_pos=int(self.lens[slot]))
+            if pages:
+                if copy is not None:
+                    self.caches = self._copy_page_fn(
+                        self.caches, jnp.int32(copy[0]), jnp.int32(copy[1]))
+                    m.counter("serving.kv.pages_copied").inc()
+                # evictions are counted by _on_prefix_evict
+                self.prefix.insert(hkey, None, n_stored, pages=pages)
+                m.counter("serving.prefix_cache.inserts").inc()
         else:
             ev = self.prefix.insert(hkey, self._read_slot(slot, n), n)
             m.counter("serving.prefix_cache.inserts").inc()
@@ -606,9 +866,21 @@ class Engine:
         self._key, k = jax.random.split(self._key)
         t_chunk0 = time.perf_counter()
         with obs.trace.span("prefill_chunk", n=int(len(targets))):
-            tok, self.caches, bad = self._chunk_fn(
-                self.params, self.caches, jnp.asarray(toks),
-                jnp.asarray(last_idx), k, jnp.asarray(sel))
+            if self._kv is not None:
+                writes = {s: (self._prefill_pos[s],
+                              self._prefill_pos[s] + L)
+                          for s, L in seg_len.items()}
+                rtab, wtab, wmask, commits = self._kv.write_plan(writes)
+                tok, self.caches, bad = self._chunk_paged_fn(
+                    self.params, self.caches, jnp.asarray(self.lens),
+                    jnp.asarray(rtab), jnp.asarray(wtab),
+                    jnp.asarray(wmask), jnp.asarray(toks),
+                    jnp.asarray(last_idx), k)
+                self._commit_cow(commits)
+            else:
+                tok, self.caches, bad = self._chunk_fn(
+                    self.params, self.caches, jnp.asarray(toks),
+                    jnp.asarray(last_idx), k, jnp.asarray(sel))
             tok_np = np.asarray(tok)
             bad_np = np.asarray(bad)
         if obs.tracer.enabled:
@@ -637,9 +909,12 @@ class Engine:
                     req.degraded = True
                     m.counter("serving.degraded_samples").inc()
                 self._finish_slot_prefill(slot, req, int(tok_np[slot]))
-        # one authoritative host->device len write per tick: targets got
-        # their cursors advanced, finished slots their true prompt length
-        self.caches["len"] = jnp.asarray(self.lens)
+        if self._kv is None:
+            # one authoritative host->device len write per tick: targets
+            # got their cursors advanced, finished slots their true prompt
+            # length (the paged pool has no len leaf — self.lens is a
+            # traced argument of every paged step instead)
+            self.caches["len"] = jnp.asarray(self.lens)
 
     def _prefill_tick_legacy(self) -> None:
         """Pre-PR path: one [1, bucket] forward per stalled slot, with a
@@ -730,7 +1005,12 @@ class Engine:
         # copies for a wave sharing one entry coalesce into one write
         admitted = []
         while self.pending:
-            slot = self.sched.admit()
+            if self._kv is not None:
+                # paged admission peeks: match + pin + allocate first,
+                # claim the slot only once the pool covers the request
+                slot = self._admit_paged(self.pending[0])
+            else:
+                slot = self.sched.admit()
             if slot < 0:
                 break
             req = self.pending.popleft()
@@ -748,8 +1028,13 @@ class Engine:
                 obs.tracer.complete("queue_wait", req.submit_t, req.admit_t,
                                     pid=_REQ_TRACK_PID, tid=req.rid,
                                     slot=slot)
-        if admitted:
+        if admitted and self._kv is None:
             self._begin_prefill_batch(admitted)
+        if self._kv is not None:
+            free = self._kv.pool.free_pages
+            m.gauge("serving.kv.free_pages").set(free)
+            m.gauge("serving.kv.pool_occupancy").set(
+                1.0 - free / self._kv.pool.n_pages)
         m.gauge("serving.queue_depth").set(len(self.pending))
         m.gauge("serving.slot_occupancy").set(
             float(self.sched.active.sum()) / self.n_slots)
@@ -793,9 +1078,21 @@ class Engine:
         self._key, k = jax.random.split(self._key)
         toks = jnp.asarray(self.last_tok)
         with obs.trace.span("decode_tick", n=len(picked)):
-            new_tok, self.caches, dev_ctrs, ent, bad = self._decode_fn(
-                self.params, self.caches, toks, k, jnp.asarray(sel),
-                jnp.int32(fault_code))
+            if self._kv is not None:
+                writes = {int(s): (int(self.lens[s]), int(self.lens[s]) + 1)
+                          for s in picked}
+                rtab, wtab, wmask, commits = self._kv.write_plan(writes)
+                new_tok, self.caches, dev_ctrs, ent, bad = \
+                    self._decode_paged_fn(
+                        self.params, self.caches, jnp.asarray(self.lens),
+                        jnp.asarray(rtab), jnp.asarray(wtab),
+                        jnp.asarray(wmask), toks, k, jnp.asarray(sel),
+                        jnp.int32(fault_code))
+                self._commit_cow(commits)
+            else:
+                new_tok, self.caches, dev_ctrs, ent, bad = self._decode_fn(
+                    self.params, self.caches, toks, k, jnp.asarray(sel),
+                    jnp.int32(fault_code))
             toks_np = np.asarray(new_tok)
             bad_np = np.asarray(bad)
         obs.merge_device(m, dev_ctrs, prefix="serving.decode.")
@@ -838,9 +1135,13 @@ class Engine:
         """Export jit-cache growth as `serving.recompiles.*` counters —
         the chunked path's whole point is that `prefill_chunk` stays at
         1 forever while legacy `prefill` grows per bucket."""
-        for name, fn in (("prefill", self._prefill_fn),
-                         ("prefill_chunk", self._chunk_fn),
-                         ("decode", self._decode_fn)):
+        fns = [("prefill", self._prefill_fn),
+               ("prefill_chunk", self._chunk_fn),
+               ("decode", self._decode_fn)]
+        if self._kv is not None:
+            fns += [("prefill_chunk_paged", self._chunk_paged_fn),
+                    ("decode_paged", self._decode_paged_fn)]
+        for name, fn in fns:
             try:
                 n = int(fn._cache_size())
             except Exception:
@@ -866,6 +1167,11 @@ class Engine:
         if self.prefix is not None:
             self.metrics.gauge("serving.prefix_cache.size").set(
                 len(self.prefix))
+        if self._kv is not None:
+            free = self._kv.pool.free_pages
+            self.metrics.gauge("serving.kv.free_pages").set(free)
+            self.metrics.gauge("serving.kv.pool_occupancy").set(
+                1.0 - free / self._kv.pool.n_pages)
         return self.metrics.snapshot()
 
     def debug_requests(self, max_done: int = 32) -> List[Dict[str, Any]]:

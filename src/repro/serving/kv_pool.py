@@ -1,0 +1,419 @@
+"""Paged KV cache: fixed-size page pool + block tables with ref-counted,
+copy-on-write prefix sharing.
+
+The contiguous engine layout gives every slot a private ``[max_len]`` KV
+slab; a prefix-cache hit *copies* the cached prefix into the slot.  The
+paged layout is the vLLM idea applied to the same engine: KV lives in one
+fixed pool of ``n_pages`` pages of ``page_size`` tokens each, and every
+slot owns a *block table* — a row of page ids whose concatenation is that
+slot's logical ``[max_len]`` sequence.  A prefix-cache hit then pins the
+entry's pages into the hitter's table (refcount bump, O(1) per hit); only
+a *partial* trailing page is ever copied, and only when someone will
+write into it (copy-on-write).
+
+Three layers live here:
+
+- ``PagePool`` — the host-side allocator: LIFO free list + per-page
+  refcounts.  ``alloc`` gives pages at refcount 1, ``share`` pins,
+  ``release`` unpins and returns pages to the free list at zero.
+- ``PagedKV`` — per-slot block tables, the pending-COW map, admission
+  math, per-tick write plans, and slot/entry lifecycle.  Pure host
+  bookkeeping; it never touches device memory.
+- ``gather_pages`` / ``scatter_pages`` / ``copy_page`` — pure functions
+  traced *inside* the engine's jitted step functions.  Gather builds the
+  contiguous ``[n_slots, max_len]`` view the model already understands
+  from the pool + a read table; scatter writes back only the pages a
+  write plan marked dirty, everything else is routed to a dedicated
+  trash page (index ``n_pages``) so shared pages are never written in
+  place.
+
+Device pool leaves are the contiguous cache leaves with the slot axis
+``B`` and sequence axis ``S = max_len`` replaced by
+``(n_pages + 1, page_size)``; page ``n_pages`` is the trash page and is
+never allocated.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+import jax.numpy as jnp
+
+__all__ = [
+    "PagePool",
+    "PagedKV",
+    "WriteCommit",
+    "gather_pages",
+    "scatter_pages",
+    "copy_page",
+    "paged_leaf_shape",
+]
+
+
+class PagePool:
+    """Host-side ref-counted page allocator over a fixed pool.
+
+    Page ids are ``0 .. n_pages - 1``; id ``n_pages`` is reserved as the
+    device-side trash page and never handed out.  Every page is either on
+    the free list (refcount 0) or owned (refcount >= 1) — ``check()``
+    asserts exactly that, and the allocator raises on double-free and on
+    releasing below zero rather than silently corrupting state.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages > 0 and page_size > 0
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.trash = self.n_pages  # device arrays are sized n_pages + 1
+        # Pop from the end -> pages are handed out in ascending id order,
+        # which keeps allocation deterministic for the bench gate.
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self.refcount = np.zeros(self.n_pages, dtype=np.int32)
+        self.total_allocs = 0
+        self.total_frees = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` pages at refcount 1, or ``None`` if the pool can't."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self.refcount[p] == 0
+            self.refcount[p] = 1
+        self.total_allocs += n
+        return pages
+
+    def share(self, pages: List[int]) -> None:
+        """Pin already-owned pages (one extra reference each)."""
+        for p in pages:
+            if not (0 <= p < self.n_pages) or self.refcount[p] <= 0:
+                raise ValueError(f"share of unowned page {p}")
+            self.refcount[p] += 1
+
+    def release(self, pages: List[int]) -> int:
+        """Drop one reference per page; returns how many hit zero (freed)."""
+        freed = 0
+        for p in pages:
+            if not (0 <= p < self.n_pages) or self.refcount[p] <= 0:
+                raise ValueError(f"double free of page {p}")
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed += 1
+                self.total_frees += 1
+        return freed
+
+    def check(self, owners: Optional[Dict[int, int]] = None) -> None:
+        """Invariant check: free list and refcounts partition the pool.
+
+        With ``owners`` (page id -> expected reference count from a model
+        of who holds what), also checks refcounts match the model exactly
+        — the property tests drive this.
+        """
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list has duplicates"
+        for p in range(self.n_pages):
+            rc = int(self.refcount[p])
+            assert rc >= 0
+            assert (rc == 0) == (p in free), f"page {p}: rc={rc} free={p in free}"
+        if owners is not None:
+            for p in range(self.n_pages):
+                assert int(self.refcount[p]) == owners.get(p, 0), (
+                    f"page {p}: rc={int(self.refcount[p])} model={owners.get(p, 0)}"
+                )
+
+
+@dataclass
+class WriteCommit:
+    """One pending-COW resolution carried from ``write_plan`` to ``commit``."""
+
+    slot: int
+    pos: int  # block-table position within the slot
+    old_page: int  # the shared page the slot was reading
+    new_page: int  # the private copy the scatter just populated
+
+
+class PagedKV:
+    """Block tables + pending-COW bookkeeping for the serving engine.
+
+    Lifecycle per request (all host-side; the engine drives it):
+
+    - ``pages_for``/``fresh_pages_needed`` — admission math.  A request
+      admits only if the pool covers its *worst case*
+      (``ceil(min(prompt + max_new, max_len) / page_size)`` pages, minus
+      full pages pinned from a prefix hit).
+    - ``bind`` — build the slot's table: shared full pages go in as-is,
+      a shared *partial* page goes in on the read side with a fresh page
+      registered in ``pending_cow`` (the first write through that table
+      position scatters into the fresh copy), remaining positions get
+      fresh pages.  The caller pins shared pages *before* calling.
+    - ``write_plan`` — per tick: given ``{slot: (start, end)}`` token
+      write ranges, produce the read table, the write table (pending COW
+      redirected), the dirty-page mask, and the commits to apply after
+      the device step.  Asserts no plain write ever lands on a shared
+      page.
+    - ``commit`` — after the device scatter: point the table at the COW
+      copies, drop the old shared references.
+    - ``release_slot`` — request finished: drop every reference the slot
+      holds (including unresolved pending-COW pages).
+    - ``entry_pages`` — prefix-cache insert: share the slot's full pages
+      with the entry; a trailing partial page is copied iff the donor
+      will still write inside it, otherwise shared outright.
+    """
+
+    def __init__(self, pool: PagePool, n_slots: int, pages_per_slot: int):
+        self.pool = pool
+        self.n_slots = int(n_slots)
+        self.pages_per_slot = int(pages_per_slot)
+        self.page_size = pool.page_size
+        self.trash = pool.trash
+        self.tables = np.full((n_slots, pages_per_slot), self.trash, dtype=np.int32)
+        self.used = np.zeros(n_slots, dtype=np.int32)  # valid prefix of each row
+        self.pending_cow: Dict[Tuple[int, int], int] = {}  # (slot, pos) -> fresh page
+
+    # -- admission math ----------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_size)  # ceil
+
+    def fresh_pages_needed(self, cap_tokens: int, matched: int) -> int:
+        """Pages to allocate for a request: worst case minus shared fulls.
+
+        A shared *partial* page still costs a fresh page (its eager COW
+        copy), so only full shared pages reduce the bill.
+        """
+        return self.pages_for(cap_tokens) - int(matched) // self.page_size
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    def bind(self, slot: int, cap_tokens: int, matched: int,
+             shared_pages: List[int]) -> List[int]:
+        """Build ``slot``'s block table; returns the fresh pages allocated.
+
+        ``shared_pages`` are the prefix entry's pages covering ``matched``
+        tokens, already pinned by the caller.  Raises if the pool cannot
+        cover the request — callers check ``fresh_pages_needed`` first.
+        """
+        need = self.pages_for(cap_tokens)
+        assert need <= self.pages_per_slot
+        full, part = divmod(int(matched), self.page_size)
+        assert len(shared_pages) == full + (1 if part else 0)
+        fresh = self.pool.alloc(need - full)
+        if fresh is None:
+            raise RuntimeError(
+                f"pool exhausted binding slot {slot}: need {need - full}, "
+                f"free {self.pool.free_pages}")
+        row = self.tables[slot]
+        row[:] = self.trash
+        row[:full] = shared_pages[:full]
+        k = 0
+        if part:
+            row[full] = shared_pages[full]  # read through the shared page…
+            self.pending_cow[(slot, full)] = fresh[k]  # …write into the copy
+            k += 1
+        row[full + (1 if part else 0):need] = fresh[k:]
+        self.used[slot] = need
+        return fresh
+
+    def release_slot(self, slot: int) -> int:
+        """Drop every reference ``slot`` holds; returns pages freed."""
+        n = int(self.used[slot])
+        pages = [int(p) for p in self.tables[slot, :n]]
+        pend_keys = [k for k in self.pending_cow if k[0] == slot]
+        pages += [self.pending_cow.pop(k) for k in pend_keys]
+        freed = self.pool.release(pages) if pages else 0
+        self.tables[slot, :] = self.trash
+        self.used[slot] = 0
+        return freed
+
+    # -- per-tick write plans ---------------------------------------------
+
+    def write_plan(
+        self, writes: Dict[int, Tuple[int, int]]
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, List[WriteCommit]]:
+        """Plan one device step.
+
+        ``writes`` maps slot -> half-open token range ``[start, end)`` the
+        step will write.  Returns ``(read_table, write_table, write_mask,
+        commits)``: the gather reads through ``read_table`` (shared pages
+        included), the scatter writes only table positions with
+        ``write_mask`` set, through ``write_table`` (pending-COW positions
+        redirected to their fresh copies — the copy picks up both the
+        shared prefix content and the new tokens in the same scatter, so
+        a COW split costs exactly one page write and no extra kernel).
+        """
+        read_tab = self.tables.copy()
+        write_tab = self.tables.copy()
+        mask = np.zeros((self.n_slots, self.pages_per_slot), dtype=bool)
+        commits: List[WriteCommit] = []
+        for slot, (start, end) in writes.items():
+            if end <= start:
+                continue
+            assert 0 <= start and end <= self.pages_per_slot * self.page_size
+            first = start // self.page_size
+            last = (end - 1) // self.page_size
+            assert last < int(self.used[slot]), (
+                f"slot {slot} writes [{start},{end}) beyond bound pages")
+            for pos in range(first, last + 1):
+                mask[slot, pos] = True
+                fresh = self.pending_cow.get((slot, pos))
+                page = int(self.tables[slot, pos])
+                if fresh is not None:
+                    write_tab[slot, pos] = fresh
+                    commits.append(WriteCommit(slot, pos, page, fresh))
+                else:
+                    # In-place write: the slot must be the page's ONLY
+                    # owner.  Shared pages are reachable from a write
+                    # range in exactly one way — the partial page of a
+                    # prefix hit — and bind() registers that as pending
+                    # COW; entry donations only ever cover tokens below
+                    # the donor's append-only cursor.  Anything else
+                    # here is a refcount bug, not a plan.
+                    assert int(self.pool.refcount[page]) == 1, (
+                        f"shared page {page} (rc="
+                        f"{int(self.pool.refcount[page])}) written in "
+                        f"place by slot {slot}")
+        return read_tab, write_tab, mask, commits
+
+    def commit(self, commits: List[WriteCommit]) -> None:
+        """Apply COW resolutions after the device scatter ran."""
+        for c in commits:
+            assert self.pending_cow.get((c.slot, c.pos)) == c.new_page
+            del self.pending_cow[(c.slot, c.pos)]
+            self.tables[c.slot, c.pos] = c.new_page
+            self.pool.release([c.old_page])
+
+    # -- prefix-cache entries ---------------------------------------------
+
+    def entry_pages(
+        self, slot: int, n_tokens: int, next_write_pos: int,
+    ) -> Tuple[List[int], Optional[Tuple[int, int]], int]:
+        """Plan a prefix-cache insert donating ``slot``'s first ``n_tokens``.
+
+        Returns ``(pages, copy, n_stored)``: the page chain the entry
+        should hold (references already taken), an optional ``(src, dst)``
+        device page copy the caller must perform, and how many tokens the
+        chain actually covers.  Full pages are shared outright.  A
+        trailing partial page is shared too *unless* the donor will still
+        write inside it (``next_write_pos`` inside that page) — then it
+        is copied into a fresh page so the donor's future writes don't
+        leak into the entry.  If no page is available for that copy the
+        entry is truncated to its full pages (``n_stored < n_tokens``).
+        """
+        full, part = divmod(int(n_tokens), self.page_size)
+        row = self.tables[slot]
+        assert full + (1 if part else 0) <= int(self.used[slot])
+        pages = [int(p) for p in row[:full]]
+        self.pool.share(pages)
+        copy: Optional[Tuple[int, int]] = None
+        n_stored = int(n_tokens)
+        if part:
+            src = int(row[full])
+            if int(next_write_pos) < (full + 1) * self.page_size:
+                fresh = self.pool.alloc(1)
+                if fresh is None:
+                    n_stored = full * self.page_size  # truncate to full pages
+                else:
+                    copy = (src, fresh[0])
+                    pages.append(fresh[0])  # entry owns the copy (rc already 1)
+            else:
+                self.pool.share([src])
+                pages.append(src)
+        return (pages, copy, n_stored) if pages else ([], None, 0)
+
+    # -- introspection -----------------------------------------------------
+
+    def referenced_pages(self) -> Dict[int, int]:
+        """Reference count per page held by *slots* (tables + pending COW)."""
+        refs: Dict[int, int] = {}
+        for slot in range(self.n_slots):
+            for p in self.tables[slot, : int(self.used[slot])]:
+                p = int(p)
+                refs[p] = refs.get(p, 0) + 1
+        for page in self.pending_cow.values():
+            refs[page] = refs.get(page, 0) + 1
+        return refs
+
+
+# -- device-side pure functions (traced inside the engine's jitted steps) --
+
+
+def paged_leaf_shape(shape: Tuple[int, ...], ax: int, n_pages: int,
+                     page_size: int) -> Tuple[int, ...]:
+    """Contiguous cache leaf shape -> pool leaf shape.
+
+    ``ax`` is the slot axis; the sequence axis is ``ax + 1``.  Both are
+    replaced by ``(n_pages + 1, page_size)`` — the ``+ 1`` is the trash
+    page scatters route masked-off writes to.
+    """
+    return shape[:ax] + (n_pages + 1, page_size) + shape[ax + 2:]
+
+
+def gather_pages(pool_tree, ax_tree, table, n_slots: int,
+                 pages_per_slot: int, page_size: int):
+    """Build the contiguous ``[n_slots, max_len]`` view from the pool.
+
+    ``table`` is the int32 ``[n_slots, pages_per_slot]`` read table.  For
+    each leaf, ``take`` along the page axis followed by a row-major
+    reshape concatenates each slot's pages in order — exactly the view
+    the model's attention already indexes with ``len`` masks, so the
+    model code is untouched by the page layout.
+    """
+    flat = table.reshape(-1)
+
+    def g(leaf, ax):
+        out = jnp.take(leaf, flat, axis=ax)
+        pre, post = out.shape[:ax], out.shape[ax + 2:]
+        return out.reshape(pre + (n_slots, pages_per_slot * page_size) + post)
+
+    return jax.tree.map(g, pool_tree, ax_tree)
+
+
+def scatter_pages(pool_tree, ax_tree, view_tree, write_table, write_mask,
+                  n_slots: int, pages_per_slot: int, page_size: int,
+                  trash: int):
+    """Write dirty pages of a contiguous view back into the pool.
+
+    Positions with ``write_mask`` clear are routed to the trash page, so
+    one fused scatter with a static shape serves every tick regardless of
+    which slots wrote what — no per-request recompiles, and shared pages
+    are physically unreachable from the write path (their table entries
+    are either masked off or COW-redirected by the write plan).
+    """
+    idx = jnp.where(write_mask.reshape(-1), write_table.reshape(-1), trash)
+
+    def s(pool_leaf, view_leaf, ax):
+        pre, post = view_leaf.shape[:ax], view_leaf.shape[ax + 2:]
+        v = view_leaf.reshape(pre + (n_slots * pages_per_slot, page_size) + post)
+        p0 = jnp.moveaxis(pool_leaf, ax, 0)
+        v0 = jnp.moveaxis(v, ax, 0)
+        p0 = p0.at[idx].set(v0.astype(p0.dtype))
+        return jnp.moveaxis(p0, 0, ax)
+
+    return jax.tree.map(s, pool_tree, view_tree, ax_tree)
+
+
+def copy_page(pool_tree, ax_tree, src, dst):
+    """Device copy of one page (``src -> dst``) across every pool leaf.
+
+    ``src``/``dst`` are traced scalars, so one compile covers every
+    prefix-cache partial-page copy.
+    """
+
+    def cp(leaf, ax):
+        page = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=ax)
+        starts = [0] * leaf.ndim
+        starts[ax] = dst
+        return jax.lax.dynamic_update_slice(leaf, page, tuple(starts))
+
+    return jax.tree.map(cp, pool_tree, ax_tree)

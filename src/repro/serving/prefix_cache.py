@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 
 def chain_hashes(prompt: Sequence[int], chunk: int) -> List[str]:
@@ -53,17 +53,28 @@ def chain_hashes(prompt: Sequence[int], chunk: int) -> List[str]:
 
 @dataclasses.dataclass
 class PrefixEntry:
-    n_tokens: int          # prefix length (a multiple of the chunk size)
-    caches: Any            # batch=1 cache pytree cropped to n_tokens
+    n_tokens: int          # prefix length covered by this entry
+    caches: Any = None     # contiguous layout: batch=1 cache pytree
+    pages: Optional[List[int]] = None  # paged layout: ref-held page-id chain
 
 
 class PrefixCache:
-    """Bounded LRU pool of KV prefix snapshots, keyed by chain hash."""
+    """Bounded LRU pool of KV prefix snapshots, keyed by chain hash.
 
-    def __init__(self, chunk: int, capacity: int):
+    Entries hold either a concrete cropped KV pytree (``caches``, the
+    contiguous engine layout) or a ref-counted page-id chain (``pages``,
+    the paged layout — the pool refcounts, not this cache, own page
+    lifetime; ``on_evict`` is how the engine releases an evicted entry's
+    references).  ``on_evict`` fires for *every* eviction — capacity
+    overflow in :meth:`insert` and explicit :meth:`evict_lru` alike.
+    """
+
+    def __init__(self, chunk: int, capacity: int,
+                 on_evict: Optional[Callable[[PrefixEntry], None]] = None):
         assert chunk > 0 and capacity > 0
         self.chunk = chunk
         self.capacity = capacity
+        self.on_evict = on_evict
         self._entries: "OrderedDict[str, PrefixEntry]" = OrderedDict()
         self.hits = 0          # chunks served from cache
         self.misses = 0        # full chunks that had to be computed
@@ -99,16 +110,34 @@ class PrefixCache:
         self.misses += len(hs) - depth
         return (best.n_tokens if best else 0), best, hs
 
-    def insert(self, hkey: str, caches: Any, n_tokens: int) -> int:
+    def insert(self, hkey: str, caches: Any, n_tokens: int,
+               pages: Optional[List[int]] = None) -> int:
         """Store a snapshot; returns the number of evictions performed.
         Re-inserting an existing key only refreshes its recency."""
         if hkey in self._entries:
             self._entries.move_to_end(hkey)
             return 0
-        self._entries[hkey] = PrefixEntry(n_tokens=n_tokens, caches=caches)
+        self._entries[hkey] = PrefixEntry(n_tokens=n_tokens, caches=caches,
+                                          pages=pages)
         evicted = 0
         while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+            _, entry = self._entries.popitem(last=False)
             evicted += 1
+            if self.on_evict is not None:
+                self.on_evict(entry)
         self.evictions += evicted
         return evicted
+
+    def evict_lru(self) -> Optional[PrefixEntry]:
+        """Evict the least-recently-used entry (pool-pressure path).
+
+        Returns the evicted entry (after ``on_evict`` ran) or ``None`` if
+        the cache is empty.
+        """
+        if not self._entries:
+            return None
+        _, entry = self._entries.popitem(last=False)
+        self.evictions += 1
+        if self.on_evict is not None:
+            self.on_evict(entry)
+        return entry

@@ -1,0 +1,319 @@
+"""Paged KV pool: allocator invariants under random interleavings,
+gather/scatter correctness, copy-on-write, and admission behavior.
+
+The property test hand-rolls its random interleavings with a seeded
+numpy Generator (hypothesis is not a dependency of this repo): each
+iteration drives the REAL PagedKV/PagePool API through randomized
+request lifecycles — bind with/without a prefix hit, incremental
+append-only writes (chunk + decode shaped), prefix-entry donation,
+entry eviction, slot release — while a host-side model tracks who holds
+which page.  After every operation the pool must agree with the model
+exactly: no page leaked, no page double-freed, free list and refcounts
+partitioning the pool, and shared pages never written in place
+(`write_plan` raises if a plan would)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import (PagedKV, PagePool, gather_pages,
+                                   paged_leaf_shape, scatter_pages)
+
+# ---------------------------------------------------------------------------
+# allocator unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_share_release_roundtrip():
+    pool = PagePool(n_pages=4, page_size=8)
+    assert pool.free_pages == 4
+    pages = pool.alloc(3)
+    assert sorted(pages) == pages and len(set(pages)) == 3
+    assert pool.free_pages == 1
+    pool.share(pages[:2])
+    assert pool.release(pages) == 1          # two still pinned
+    assert pool.free_pages == 2
+    assert pool.release(pages[:2]) == 2
+    assert pool.free_pages == 4
+    pool.check()
+
+
+def test_pool_overcommit_returns_none():
+    pool = PagePool(n_pages=2, page_size=4)
+    assert pool.alloc(3) is None
+    assert pool.free_pages == 2              # failed alloc takes nothing
+    got = pool.alloc(2)
+    assert pool.alloc(1) is None
+    pool.release(got)
+
+
+def test_pool_double_free_and_foreign_share_raise():
+    pool = PagePool(n_pages=2, page_size=4)
+    (p,) = pool.alloc(1)
+    pool.release([p])
+    with pytest.raises(ValueError):
+        pool.release([p])                    # double free
+    with pytest.raises(ValueError):
+        pool.share([1])                      # share of an unowned page
+    pool.check()
+
+
+def test_write_plan_rejects_shared_page_write():
+    """The issue's core safety invariant: a write plan that would land
+    on a page with refcount > 1 (shared, no pending COW) must refuse."""
+    pool = PagePool(n_pages=8, page_size=4)
+    kv = PagedKV(pool, n_slots=2, pages_per_slot=4)
+    kv.bind(0, cap_tokens=8, matched=0, shared_pages=[])
+    # simulate an external holder (a prefix entry) on slot 0's first page
+    pool.share([int(kv.tables[0, 0])])
+    with pytest.raises(AssertionError):
+        kv.write_plan({0: (0, 4)})
+
+
+# ---------------------------------------------------------------------------
+# property test: random request interleavings vs an ownership model
+# ---------------------------------------------------------------------------
+
+N_PAGES, PAGE, SLOTS, PPS = 24, 4, 3, 6
+
+
+class _Model:
+    """Host model of who holds which page: per-slot holdings (table +
+    pending COW) and per-entry chains.  The pool's refcounts must equal
+    the model's reference counts after every operation."""
+
+    def __init__(self):
+        self.slots = {}      # slot -> {"pages": [...], "pending": {pos: pg},
+        #                              "cap": int, "cursor": int, "matched": int}
+        self.entries = []    # list of page-id lists
+
+    def owners(self):
+        refs = {}
+        for st in self.slots.values():
+            for p in st["pages"]:
+                if p >= 0:
+                    refs[p] = refs.get(p, 0) + 1
+            for p in st["pending"].values():
+                refs[p] = refs.get(p, 0) + 1
+        for chain in self.entries:
+            for p in chain:
+                refs[p] = refs.get(p, 0) + 1
+        return refs
+
+    def shared_set(self):
+        """Pages reachable from 2+ holders — never writable in place."""
+        return {p for p, n in self.owners().items() if n >= 2}
+
+
+def _check(pool, kv, model):
+    pool.check(model.owners())
+    # the kv's own view of slot holdings must agree with the model
+    refs = kv.referenced_pages()
+    slot_refs = {}
+    for st in model.slots.values():
+        for p in st["pages"]:
+            if p >= 0:
+                slot_refs[p] = slot_refs.get(p, 0) + 1
+        for p in st["pending"].values():
+            slot_refs[p] = slot_refs.get(p, 0) + 1
+    assert refs == slot_refs
+
+
+def _try_bind(rng, pool, kv, model):
+    free_slots = [s for s in range(SLOTS) if s not in model.slots]
+    if not free_slots:
+        return
+    slot = int(rng.choice(free_slots))
+    matched, shared = 0, []
+    if model.entries and rng.random() < 0.6:
+        chain = model.entries[int(rng.integers(len(model.entries)))]
+        if chain:
+            # an entry covering n tokens holds ceil(n/PAGE) pages; pick
+            # a matched length consistent with the chain we pin
+            full_tokens = len(chain) * PAGE
+            matched = int(full_tokens if rng.random() < 0.5
+                          else full_tokens - rng.integers(1, PAGE))
+            shared = list(chain)
+    cap = (int(rng.integers(matched + 1, PPS * PAGE + 1))
+           if matched < PPS * PAGE else matched)
+    need = kv.fresh_pages_needed(cap, matched)
+    if pool.free_pages < need:
+        return                               # admission would block: no-op
+    if shared:
+        pool.share(shared)
+    fresh = kv.bind(slot, cap, matched, shared)
+    full, part = divmod(matched, PAGE)
+    # model: table row = shared pages + fresh tail; the first fresh page
+    # is the pending-COW copy when the prefix ends mid-page
+    row = shared[:full]
+    pending = {}
+    if part:
+        row.append(shared[full])
+        pending[full] = fresh[0]
+        row += fresh[1:]
+    else:
+        row += fresh
+    model.slots[slot] = {"pages": row, "pending": pending, "cap": cap,
+                         "cursor": matched, "matched": matched}
+    assert len(row) == kv.pages_for(cap)
+
+
+def _try_write(rng, pool, kv, model):
+    cands = [s for s, st in model.slots.items() if st["cursor"] < st["cap"]]
+    if not cands:
+        return
+    slot = int(rng.choice(cands))
+    st = model.slots[slot]
+    n = int(rng.integers(1, min(st["cap"] - st["cursor"], 2 * PAGE) + 1))
+    start, end = st["cursor"], st["cursor"] + n
+    shared_before = model.shared_set()
+    rtab, wtab, mask, commits = kv.write_plan({slot: (start, end)})
+    # no masked write may target a page the model says is shared
+    for s in range(SLOTS):
+        for pos in range(PPS):
+            if mask[s, pos]:
+                assert int(wtab[s, pos]) not in shared_before, (
+                    "write plan targets a shared page")
+    kv.commit(commits)
+    for c in commits:
+        st["pages"][c.pos] = c.new_page
+        del st["pending"][c.pos]
+        # the old shared page loses the slot's reference (entry refs, if
+        # any, survive in the model via model.entries)
+    st["cursor"] = end
+
+
+def _try_insert_entry(rng, pool, kv, model):
+    cands = [s for s, st in model.slots.items() if st["cursor"] >= 1]
+    if not cands or len(model.entries) >= 6:
+        return
+    slot = int(rng.choice(cands))
+    st = model.slots[slot]
+    n = int(rng.integers(1, st["cursor"] + 1))
+    pages, copy, n_stored = kv.entry_pages(slot, n,
+                                           next_write_pos=st["cursor"])
+    if not pages:
+        return
+    assert n_stored <= n
+    if copy is not None:
+        assert copy[1] == pages[-1]
+    model.entries.append(list(pages))
+
+
+def _try_evict_entry(rng, pool, kv, model):
+    if not model.entries:
+        return
+    i = int(rng.integers(len(model.entries)))
+    chain = model.entries.pop(i)
+    pool.release(chain)
+
+
+def _try_release_slot(rng, pool, kv, model):
+    if not model.slots:
+        return
+    slot = int(rng.choice(list(model.slots)))
+    kv.release_slot(slot)
+    del model.slots[slot]
+
+
+def test_allocator_invariants_under_random_interleavings():
+    ops = [_try_bind, _try_write, _try_write, _try_insert_entry,
+           _try_evict_entry, _try_release_slot]
+    for seed in range(12):
+        rng = np.random.default_rng(seed)
+        pool = PagePool(N_PAGES, PAGE)
+        kv = PagedKV(pool, SLOTS, PPS)
+        model = _Model()
+        for _ in range(120):
+            ops[int(rng.integers(len(ops)))](rng, pool, kv, model)
+            _check(pool, kv, model)
+        # teardown: release everything -> the pool must drain completely
+        for slot in list(model.slots):
+            kv.release_slot(slot)
+            del model.slots[slot]
+        for chain in model.entries:
+            pool.release(chain)
+        model.entries.clear()
+        pool.check({})
+        assert pool.free_pages == N_PAGES, "pages leaked"
+        assert pool.total_allocs == pool.total_frees
+
+
+# ---------------------------------------------------------------------------
+# device-side gather/scatter: exact roundtrip vs a numpy reference
+# ---------------------------------------------------------------------------
+
+
+def test_gather_scatter_roundtrip_matches_numpy():
+    n_slots, pps, ps, n_pages = 2, 3, 4, 7
+    rng = np.random.default_rng(0)
+    # leaf layout [n_layers, page_axis, page_size, heads]: slot axis 1
+    pool_np = rng.normal(size=paged_leaf_shape((2, n_slots, pps * ps, 3),
+                                               1, n_pages, ps)).astype(np.float32)
+    table = np.array([[5, 0, 2], [1, 6, 3]], np.int32)
+    pool = {"l": {"k": jnp.asarray(pool_np)}}
+    ax = {"l": {"k": 1}}
+    view = gather_pages(pool, ax, jnp.asarray(table), n_slots, pps, ps)
+    got = np.asarray(view["l"]["k"])
+    want = np.stack([np.concatenate([pool_np[:, p] for p in row], axis=1)
+                     for row in table], axis=1)
+    np.testing.assert_array_equal(got, want)
+
+    # scatter back through a mask: only dirty pages change, masked-off
+    # writes land on the trash page, real pages stay bit-identical
+    new_view = jnp.asarray(rng.normal(size=got.shape).astype(np.float32))
+    mask = np.zeros((n_slots, pps), bool)
+    mask[0, 1] = mask[1, 2] = True
+    out = scatter_pages(pool, ax, {"l": {"k": new_view}},
+                        jnp.asarray(table), jnp.asarray(mask),
+                        n_slots, pps, ps, trash=n_pages)
+    out_np = np.asarray(out["l"]["k"])
+    nv = np.asarray(new_view)
+    for s in range(n_slots):
+        for pos in range(pps):
+            page = table[s, pos]
+            chunk = nv[:, s, pos * ps:(pos + 1) * ps]
+            if mask[s, pos]:
+                np.testing.assert_array_equal(out_np[:, page], chunk)
+            else:
+                np.testing.assert_array_equal(out_np[:, page],
+                                              pool_np[:, page])
+
+
+# ---------------------------------------------------------------------------
+# entry donation: partial page copied only when the donor still writes it
+# ---------------------------------------------------------------------------
+
+
+def test_entry_pages_copies_partial_only_under_conflict():
+    pool = PagePool(16, 4)
+    kv = PagedKV(pool, n_slots=1, pages_per_slot=4)
+    kv.bind(0, cap_tokens=16, matched=0, shared_pages=[])
+    # donor cursor inside page 1 (pos 6): donating 6 tokens must copy
+    # the half-written page 1, sharing only page 0
+    pages, copy, n_stored = kv.entry_pages(0, 6, next_write_pos=6)
+    assert n_stored == 6 and len(pages) == 2
+    assert copy is not None and copy[0] == int(kv.tables[0, 1])
+    assert pages[0] == int(kv.tables[0, 0]) and pages[1] == copy[1]
+    assert int(pool.refcount[pages[0]]) == 2     # shared with the slot
+    assert int(pool.refcount[pages[1]]) == 1     # entry-private copy
+    # donor past the page boundary: the partial page is shared outright
+    pages2, copy2, n2 = kv.entry_pages(0, 6, next_write_pos=8)
+    assert copy2 is None and n2 == 6
+    assert pages2[1] == int(kv.tables[0, 1])
+    pool.release(pages)
+    pool.release(pages2)
+    assert kv.release_slot(0) == 4
+    pool.check({})
+
+
+def test_entry_pages_truncates_when_pool_exhausted():
+    pool = PagePool(4, 4)
+    kv = PagedKV(pool, n_slots=1, pages_per_slot=4)
+    kv.bind(0, cap_tokens=16, matched=0, shared_pages=[])
+    assert pool.free_pages == 0
+    pages, copy, n_stored = kv.entry_pages(0, 6, next_write_pos=6)
+    assert copy is None and n_stored == 4        # truncated to full pages
+    assert pages == [int(kv.tables[0, 0])]
+    pool.release(pages)
+    kv.release_slot(0)
+    pool.check({})

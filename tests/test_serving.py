@@ -224,3 +224,136 @@ def test_step_masks_np_matches_hw_reference():
                                        jnp.asarray(st), jnp.asarray(bar))
         assert wid_np == int(wid_hw)
         assert (vis_np == np.asarray(vis_hw)).all()
+
+
+# ---------------------------------------------------------------------------
+# paged KV layout: bit-identity with contiguous + COW/admission behavior
+# ---------------------------------------------------------------------------
+
+
+def _run_workload(prompts, max_new, *, layout, page_size=8, n_slots=2,
+                  prefix_entries=0, kv_pages=None):
+    eng = Engine(CFG, PARAMS, n_slots=n_slots, max_len=64, prompt_bucket=8,
+                 prefill_chunk=8, prefill_mode="chunked", eos_id=-1,
+                 prefix_cache_entries=prefix_entries, kv_layout=layout,
+                 kv_page_size=page_size, kv_pages=kv_pages)
+    rids = [eng.submit(p, max_new=max_new) for p in prompts]
+    eng.run()
+    res = eng.results()
+    return ([res[r] for r in rids],
+            [eng.requests[r].finish_reason for r in rids], eng)
+
+
+def test_paged_bit_identical_to_contiguous():
+    """The gate the issue demands: on the existing serving contract
+    workloads, --kv-layout paged produces exactly the greedy tokens and
+    finish reasons of the contiguous layout (which itself matches the
+    sequential reference)."""
+    workloads = [
+        ([[5, 9, 2], [7, 1], [3, 3, 3, 3], [11, 4, 6], [8], [2, 9]], 5, 0),
+        ([[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11], [4, 4, 2, 1], [9] * 20],
+         4, 0),
+        ([list(range(1, 17)) + t for t in ([21, 22, 23], [31, 32], [41])],
+         3, 4),                      # shared 16-token prefix, cache on
+    ]
+    for prompts, max_new, entries in workloads:
+        toks_c, fin_c, _ = _run_workload(prompts, max_new, layout="contiguous",
+                                         prefix_entries=entries)
+        toks_p, fin_p, eng = _run_workload(prompts, max_new, layout="paged",
+                                           prefix_entries=entries)
+        assert toks_p == toks_c, prompts
+        assert fin_p == fin_c, prompts
+        for out, p in zip(toks_p, prompts):
+            assert out == ref_decode(p, max_new + 1), p
+    # the shared-prefix workload ran last: hits pinned pages instead of
+    # copying (16-token prefix, page size 8 -> page-aligned, zero copies)
+    snap = eng.metrics_snapshot()
+    assert snap["serving.kv.pages_shared"]["value"] > 0
+    assert snap.get("serving.kv.pages_copied", {"value": 0})["value"] == 0
+    assert snap.get("serving.kv.cow_splits", {"value": 0})["value"] == 0
+    # paged counts one hit per admitted request (vs per chunk skipped in
+    # the contiguous path), so assert presence rather than the exact tally
+    assert snap["serving.prefix_cache.hits"]["value"] >= 1
+
+
+def test_paged_cow_split_copies_one_partial_page_per_hit():
+    """A prefix hit that ends mid-page pins the shared partial page and
+    copies it exactly once, on the hitter's first write (COW): per hit,
+    copied bytes <= one page."""
+    from repro.obs.flight import flight
+    shared = list(range(1, 9))            # 8 tokens: half of a 16-token page
+    prompts = [shared + t for t in ([21, 22, 23], [31, 32], [41])]
+    toks_c, fin_c, _ = _run_workload(prompts, 3, layout="contiguous",
+                                     page_size=16, n_slots=1,
+                                     prefix_entries=4)
+    flight.enable()
+    flight.clear()
+    try:
+        toks_p, fin_p, eng = _run_workload(prompts, 3, layout="paged",
+                                           page_size=16, n_slots=1,
+                                           prefix_entries=4)
+        events = flight.snapshot()
+    finally:
+        flight.disable()
+    assert toks_p == toks_c and fin_p == fin_c
+    snap = eng.metrics_snapshot()
+    hits = snap["serving.prefix_cache.hits"]["value"]
+    assert hits == 2                      # requests 2 and 3 hit the 8-token entry
+    assert snap["serving.kv.cow_splits"]["value"] == hits
+    # copies = one COW page per hit + one insert-side copy of the
+    # donor's half-written page; never a full prefix copy
+    assert snap["serving.kv.pages_copied"]["value"] == hits + 1
+    assert snap["serving.kv.pages_shared"]["value"] == hits
+    assert [e for e in events if e["kind"] == "kv.cow"]
+
+
+def test_paged_admission_blocks_until_pages_free():
+    """A request only admits when the pool covers its worst case; when it
+    can't, it waits (kv.oom flight event, admit_blocked counter) and
+    still completes correctly once pages free up."""
+    from repro.obs.flight import flight
+    prompts = [[i + 1] * 20 for i in range(4)]   # cap 24 tokens = 2 pages
+    flight.enable()
+    flight.clear()
+    try:
+        # pool of 4 sixteen-token pages: two in-flight requests fill it
+        toks, fins, eng = _run_workload(prompts, 4, layout="paged",
+                                        page_size=16, n_slots=4,
+                                        kv_pages=4)
+        events = flight.snapshot()
+    finally:
+        flight.disable()
+    snap = eng.metrics_snapshot()
+    assert snap["serving.kv.admit_blocked"]["value"] > 0
+    oom = [e for e in events if e["kind"] == "kv.oom"]
+    assert oom and all("need_pages" in e for e in oom)
+    assert fins == ["max_new"] * 4
+    for out, p in zip(toks, prompts):
+        assert out == ref_decode(p, 5), p
+    assert eng._kv.pool.free_pages == eng._kv.pool.n_pages   # all released
+
+
+def test_paged_prefix_eviction_releases_pages():
+    """Evicting a prefix entry (capacity pressure) returns its pinned
+    pages to the pool and emits a kv.evict flight event."""
+    from repro.obs.flight import flight
+    # distinct 8-token prefixes -> distinct entries; capacity 1 evicts
+    prompts = [[i + 1] * 8 + [40 + i] for i in range(3)]
+    flight.enable()
+    flight.clear()
+    try:
+        toks, fins, eng = _run_workload(prompts, 3, layout="paged",
+                                        page_size=8, n_slots=1,
+                                        prefix_entries=1)
+        events = flight.snapshot()
+    finally:
+        flight.disable()
+    snap = eng.metrics_snapshot()
+    assert snap["serving.kv.evicted_pages"]["value"] > 0
+    assert [e for e in events if e["kind"] == "kv.evict"]
+    for out, p in zip(toks, prompts):
+        assert out == ref_decode(p, 4), p
+    # nothing leaked: free pages + pages still pinned by live entries
+    held = sum(len(e.pages) for e in eng.prefix._entries.values())
+    assert eng._kv.pool.free_pages + held == eng._kv.pool.n_pages
+    eng._kv.pool.check()
